@@ -1,0 +1,71 @@
+"""Beyond-paper elasticity experiment (the paper's §IV-B promise made
+measurable): a bursty workload against (a) fixed single-slice capacity vs
+(b) the autoscaler provisioning v5e slices on queue pressure.
+
+Reports p50/p99 RLat and node-seconds (the provider's cost)."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.accelerator import AcceleratorSpec
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+from repro.core.cluster import Cluster
+from repro.core.runtime import RuntimeDef, SimProfile
+from repro.core.workload import Phase, PhaseWorkload
+
+SLICE = AcceleratorSpec(type="v5e-4x4", slots=2, mem_bytes=16 << 30,
+                        cost_per_hour=19.2, chips=16)
+
+
+def serve_runtime() -> RuntimeDef:
+    return RuntimeDef(
+        runtime_id="serve-granite-3-2b",
+        profiles={"v5e-4x4": SimProfile(elat_median_s=0.8, sigma=0.1,
+                                        cold_start_s=8.0)})
+
+
+def burst_workload(seed: int = 0) -> PhaseWorkload:
+    return PhaseWorkload(
+        phases=[Phase("calm", 120, 0.5), Phase("burst", 300, 6.0),
+                Phase("calm2", 300, 0.5)],
+        runtime_id="serve-granite-3-2b", data_ref="d", seed=seed)
+
+
+def run(elastic: bool) -> Dict[str, float]:
+    cl = Cluster(scheduler="warm", seed=0)
+    cl.register_runtime(serve_runtime())
+    cl.store.put(b"\0" * 4096, key="d")
+    cl.add_node("auto-seed", [SLICE])
+    scaler = None
+    if elastic:
+        scaler = Autoscaler(cl, SLICE, AutoscalerConfig(
+            min_nodes=1, max_nodes=6, provision_delay_s=45.0,
+            check_interval_s=5.0), node_prefix="auto")
+        scaler.start()
+    m = cl.run_workloads([burst_workload()], extra_time_s=1200.0)
+    if scaler:
+        scaler.stop()
+        scaler._account()
+    rl = m.rlats()
+    horizon = cl.clock.now()
+    node_s = scaler.node_seconds if scaler else horizon * 1
+    return {
+        "r_success": m.r_success(),
+        "rlat_p50": m.percentile(rl, 50) or 0.0,
+        "rlat_p99": m.percentile(rl, 99) or 0.0,
+        "rlat_max": rl[-1] if rl else 0.0,
+        "node_seconds": node_s,
+        "nodes_provisioned": (len([e for e in scaler.events
+                                   if e[1] == "node-ready"])
+                              if scaler else 0),
+        "n_scale_events": len(scaler.events) if scaler else 0,
+    }
+
+
+def bench() -> Dict[str, Dict[str, float]]:
+    return {"fixed_1_slice": run(False), "autoscaled": run(True)}
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(bench(), indent=2))

@@ -1,0 +1,24 @@
+"""§V.B execution-latency table: median ELat per accelerator type for the
+tiny-YOLOv2 runtime (paper: NCS 1577 ms, K600 GPU 1675 ms)."""
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.bench_scaling import run_setup
+
+
+def bench(scale: float = 0.3) -> Dict[str, float]:
+    _, m = run_setup(with_vpu=True, scale=scale)
+    return {
+        "median_elat_gpu_s": m.median_elat("gpu"),
+        "median_elat_vpu_s": m.median_elat("vpu"),
+        "paper_gpu_s": 1.675,
+        "paper_vpu_s": 1.577,
+        "n_gpu": len(m.elats("gpu")),
+        "n_vpu": len(m.elats("vpu")),
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(bench(), indent=2))

@@ -1,0 +1,69 @@
+"""§Perf reproduction: re-lowers every hillclimb row of EXPERIMENTS.md
+(baseline + each variant) and writes results/perf_iterations.json.
+
+Must run in its own process (512-device placeholder runtime):
+    PYTHONPATH=src python -m benchmarks.bench_perf
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+# (pair, label, arch, shape, mesh, opts-dict)
+ROWS = [
+    ("A", "baseline", "mistral-large-123b", "train_4k", "single", {}),
+    ("A", "A2_no_tp", "mistral-large-123b", "train_4k", "single",
+     {"no_tp": True}),
+    ("A", "A4_no_tp+bf16state", "mistral-large-123b", "train_4k", "single",
+     {"no_tp": True, "opt_state_dtype": "bfloat16"}),
+    ("A", "A5_no_tp_multipod", "mistral-large-123b", "train_4k", "multi",
+     {"no_tp": True}),
+    ("B", "baseline", "llama4-scout-17b-a16e", "train_4k", "single", {}),
+    ("B", "B1_moe_a2a", "llama4-scout-17b-a16e", "train_4k", "single",
+     {"moe_a2a": True}),
+    ("B", "B4_moe_a2a+dots", "llama4-scout-17b-a16e", "train_4k", "single",
+     {"moe_a2a": True, "remat_policy": "dots"}),
+    ("C", "baseline", "grok-1-314b", "decode_32k", "single", {}),
+    ("C", "C1_int8_weights", "grok-1-314b", "decode_32k", "single",
+     {"weight_dtype": "int8"}),
+    ("C", "C2_int8_w+kv", "grok-1-314b", "decode_32k", "single",
+     {"weight_dtype": "int8", "cache_dtype": "int8"}),
+    ("C", "C2_qwen_int8_w+kv", "qwen2.5-14b", "decode_32k", "single",
+     {"weight_dtype": "int8", "cache_dtype": "int8"}),
+]
+
+
+def main() -> int:
+    import dataclasses
+    from repro.launch.dryrun import Opts, run_combo
+
+    out = []
+    for pair, label, arch, shape, mesh, opts_d in ROWS:
+        opts = dataclasses.replace(Opts(), **opts_d)
+        rec = run_combo(arch, shape, mesh, opts, verbose=True)
+        rec.update(pair=pair, label=label)
+        out.append(rec)
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "perf_iterations.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+    n_err = sum(r["status"] != "ok" for r in out)
+    print("\npair,label,t_comp_ms,t_mem_ms,t_coll_ms,step_ms,mem_gib")
+    for r in out:
+        if r["status"] != "ok":
+            print(f"{r['pair']},{r['label']},ERROR")
+            continue
+        rep = r["report"]
+        print(f"{r['pair']},{r['label']},{rep['t_compute']*1e3:.1f},"
+              f"{rep['t_memory']*1e3:.1f},{rep['t_collective']*1e3:.1f},"
+              f"{rep['step_time']*1e3:.1f},"
+              f"{(r['hlo_bytes_per_device'] or 0)/2**30:.1f}")
+    return n_err
+
+
+if __name__ == "__main__":
+    sys.exit(main())

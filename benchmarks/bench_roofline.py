@@ -1,0 +1,115 @@
+"""Roofline table from the dry-run sweep (results/dryrun_all.json).
+
+The heavy lifting (lower + compile on the 512-device placeholder runtime)
+lives in ``repro.launch.dryrun`` — it must run in its own process because it
+pins the XLA device count. This benchmark renders the §Roofline table and
+derived aggregates from the sweep's JSON output.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+SWEEP = os.path.join(RESULTS, "dryrun_all.json")
+
+
+def load(path: str = SWEEP) -> Optional[List[dict]]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+ICI_BW = 50e9
+
+
+def _t_coll(rep: dict) -> float:
+    """Recompute with ring-all-reduce 2x payload weighting (sweep JSONs may
+    predate the weighting; the raw per-type breakdown is authoritative)."""
+    bd = rep.get("coll_breakdown") or {}
+    if bd:
+        return sum(v * (2.0 if k == "all-reduce" else 1.0)
+                   for k, v in bd.items()) / ICI_BW
+    return rep["t_collective"]
+
+
+def table(rows: List[dict], mesh: str = "single") -> List[dict]:
+    out = []
+    for r in rows:
+        if r.get("mesh") != mesh or r.get("status") != "ok":
+            continue
+        rep = dict(r["report"])
+        rep["t_collective"] = _t_coll(rep)
+        terms = {"compute": rep["t_compute"], "memory": rep["t_memory"],
+                 "collective": rep["t_collective"]}
+        rep["dominant"] = max(terms, key=terms.get)
+        step = max(terms.values())
+        if step > 0:
+            rep["mfu"] = rep["model_flops"] / (step * r["chips"] * 197e12)
+            ideal = rep["model_flops"] / (r["chips"] * 197e12)
+            rep["roofline_fraction"] = ideal / step
+        out.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "variant": r.get("variant", ""),
+            "t_compute_ms": rep["t_compute"] * 1e3,
+            "t_memory_ms": rep["t_memory"] * 1e3,
+            "t_collective_ms": rep["t_collective"] * 1e3,
+            "dominant": rep["dominant"],
+            "useful_ratio": rep["useful_ratio"],
+            "mfu": rep["mfu"],
+            "roofline_fraction": rep["roofline_fraction"],
+            "mem_gib_per_dev": (r.get("hlo_bytes_per_device") or 0) / 2**30,
+            "fits_16g": (r.get("hlo_bytes_per_device") or 0) < 16 * 2**30,
+        })
+    return out
+
+
+def bench() -> Dict[str, object]:
+    rows = load()
+    if rows is None:
+        return {"error": "run launch/dryrun.py --arch all --shape all "
+                         "--mesh both --out results/dryrun_all.json first"}
+    tab = table(rows)
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skip" for r in rows)
+    n_err = sum(r["status"] == "error" for r in rows)
+    worst = sorted(tab, key=lambda r: r["roofline_fraction"])[:3]
+    most_coll = sorted(tab, key=lambda r: -r["t_collective_ms"])[:3]
+    return {
+        "counts": {"ok": n_ok, "skip": n_skip, "error": n_err},
+        "single_pod_rows": len(tab),
+        "worst_roofline_fraction": [
+            (r["arch"], r["shape"], round(r["roofline_fraction"], 4))
+            for r in worst],
+        "most_collective_bound": [
+            (r["arch"], r["shape"], round(r["t_collective_ms"], 1))
+            for r in most_coll],
+        "dominant_histogram": {
+            d: sum(1 for r in tab if r["dominant"] == d)
+            for d in ("compute", "memory", "collective")},
+    }
+
+
+def render_markdown(mesh: str = "single") -> str:
+    rows = load()
+    if rows is None:
+        return "(no sweep yet)"
+    tab = table(rows, mesh)
+    lines = ["| arch | shape | t_comp ms | t_mem ms | t_coll ms | dominant "
+             "| MODEL/HLO | MFU | mem GiB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(tab, key=lambda x: (x["arch"], x["shape"])):
+        nm = r["arch"] + (f" ({r['variant']})" if r["variant"] else "")
+        lines.append(
+            f"| {nm} | {r['shape']} | {r['t_compute_ms']:.2f} | "
+            f"{r['t_memory_ms']:.2f} | {r['t_collective_ms']:.2f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | {r['mfu']:.3f} | "
+            f"{r['mem_gib_per_dev']:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(json.dumps(bench(), indent=2))
+    print(render_markdown())

@@ -1,0 +1,43 @@
+"""Serving-engine microbenchmark: real continuous-batching throughput of a
+reduced model on this host (prefill/decode step latency, tokens/s) — the
+measured analogue of the runtime-instance ELat that the cluster simulation
+consumes."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve.engine import Request, ServingEngine
+
+
+def bench(arch: str = "granite-3-2b", n_requests: int = 8,
+          max_new: int = 8) -> Dict[str, float]:
+    cfg = get_config(arch).reduced()
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, max_slots=4, max_len=64)
+    # warm up compile
+    eng.generate([Request(prompt=[1, 2, 3], max_new_tokens=2, req_id=-1)])
+    reqs = [Request(prompt=[1, 2, 3, 4], max_new_tokens=max_new, req_id=i)
+            for i in range(n_requests)]
+    t0 = time.perf_counter()
+    done = eng.generate(reqs)
+    wall = time.perf_counter() - t0
+    n_tokens = sum(len(r.output) for r in done)
+    return {
+        "arch": arch,
+        "requests": float(n_requests),
+        "wall_s": wall,
+        "tokens_per_s": n_tokens / wall,
+        "decode_steps": float(eng.n_decode_steps),
+        "prefills": float(eng.n_prefills),
+        "us_per_decode_step": wall / max(eng.n_decode_steps, 1) * 1e6,
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(bench(), indent=2))

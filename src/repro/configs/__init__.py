@@ -1,0 +1,34 @@
+"""Architecture configs. One module per assigned architecture (+ the
+paper's own tiny-YOLOv2 workload). Importing this package registers all."""
+import importlib
+
+_MODULES = [
+    "llama4_scout_17b_a16e",
+    "recurrentgemma_2b",
+    "qwen2_5_14b",
+    "grok_1_314b",
+    "whisper_tiny",
+    "deepseek_7b",
+    "xlstm_350m",
+    "mistral_large_123b",
+    "llava_next_34b",
+    "granite_3_2b",
+    "tinyyolo_v2",
+]
+
+_loaded = False
+
+
+def load_all():
+    global _loaded
+    if _loaded:
+        return
+    for m in _MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+    _loaded = True
+
+
+from repro.configs.base import (  # noqa: E402,F401
+    ModelConfig, InputShape, Family, BlockKind, SHAPES,
+    get_config, list_archs, input_specs, register,
+)

@@ -1,0 +1,25 @@
+"""LLaVA-NeXT 34B. [hf:llava-hf/llava-v1.6-mistral-7b-hf, 34B numbers]
+
+Dense LM backbone (Yi-34B class). The vision tower + anyres tiling +
+projector are a STUB: ``input_specs`` provides precomputed patch embeddings
+(B, n_patches, d_model) that the model interleaves before the prompt tokens.
+"""
+from repro.configs.base import Family, ModelConfig, register
+
+
+@register("llava-next-34b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-34b",
+        family=Family.VLM,
+        n_layers=60,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=20_480,
+        vocab=64_000,
+        n_patches=2880,  # anyres: base 576 + 4 tiles x 576
+        rope_theta=5_000_000.0,
+        source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    )

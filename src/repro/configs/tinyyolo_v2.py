@@ -1,0 +1,29 @@
+"""tiny-YOLOv2 — the paper's own evaluation workload [18, YOLO9000].
+
+Hardless §V runs tinyyolov2.7 (ONNX) image detection on 2× K600 GPUs + 1
+Movidius NCS. We model it as a compact conv detection backbone so the
+paper-faithful benchmarks execute a real forward pass in "real" execution
+mode; in simulation mode its service times are calibrated to the paper's
+measured medians (GPU 1675 ms, VPU 1577 ms).
+
+This is NOT one of the 10 assigned transformer architectures — it exists for
+the Fig. 3/4 reproductions — so it is registered under its own id and given
+family DENSE with a 1-layer stub transformer config (the conv net itself
+lives in repro.models.yolo).
+"""
+from repro.configs.base import Family, ModelConfig, register
+
+
+@register("tinyyolo-v2")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="tinyyolo-v2",
+        family=Family.DENSE,
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=256,
+        vocab=125,  # 5 boxes x 25 predictions per cell (VOC-20)
+        source="arXiv:1612.08242 (YOLO9000), onnx tinyyolov2.7",
+    )

@@ -1,0 +1,29 @@
+"""Whisper-tiny. [arXiv:2212.04356]
+
+Encoder-decoder transformer backbone (4+4 layers, d=384, 6 heads). The
+mel-spectrogram + conv frontend is a STUB: ``input_specs`` provides
+precomputed (B, 1500, 384) frame embeddings.
+
+long_500k is SKIPPED for this arch (full-attention enc-dec; decoding 524k
+tokens from a 30 s audio window is semantically void) — see DESIGN.md §4.
+"""
+from repro.configs.base import Family, ModelConfig, register
+
+
+@register("whisper-tiny")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny",
+        family=Family.AUDIO,
+        n_layers=4,
+        n_encoder_layers=4,
+        n_frames=1500,
+        d_model=384,
+        n_heads=6,
+        n_kv_heads=6,
+        d_ff=1536,
+        vocab=51_865,
+        qkv_bias=True,
+        tie_embeddings=True,
+        source="arXiv:2212.04356",
+    )

@@ -1,0 +1,6 @@
+"""HARDLESS core: the paper's serverless control plane for heterogeneous
+accelerators (events, scannable queue, node managers, runtimes, metrics)."""
+from repro.core.cluster import Cluster, paper_testbed, tinyyolo_runtime
+from repro.core.events import Invocation
+from repro.core.metrics import MetricsCollector
+from repro.core.workload import PhaseWorkload, Phase, paper_phases

@@ -1,0 +1,63 @@
+"""Accelerator inventory (§IV-D: "Every node manager has a list of all
+accelerators available to it ... type, locally unique ID, and information
+necessary to schedule and balance").
+
+An accelerator is anything a runtime instance can be pinned to: a discrete
+GPU, a VPU stick, or — in the TPU adaptation — a pod mesh *slice*.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorSpec:
+    """Type-level description; nodes instantiate Accelerator per device."""
+    type: str                      # e.g. "gpu-k600", "vpu-ncs", "v5e-4x4"
+    slots: int = 1                 # concurrent runtime instances (paper: 2/GPU)
+    mem_bytes: int = 2 << 30
+    cost_per_hour: float = 1.0     # for the cost-aware policy (beyond paper)
+    # TPU adaptation: mesh-slice geometry (chips) — 0 for discrete devices
+    chips: int = 0
+
+
+@dataclasses.dataclass
+class Accelerator:
+    spec: AcceleratorSpec
+    local_id: str                  # locally unique ID on the node
+    busy_slots: int = 0
+    # warm runtime instances resident on this accelerator: runtime_key -> t_idle
+    warm: Dict[str, float] = dataclasses.field(default_factory=dict)
+    total_busy_time: float = 0.0   # for utilization accounting
+    n_executions: int = 0
+
+    @property
+    def free_slots(self) -> int:
+        return self.spec.slots - self.busy_slots
+
+    def has_warm(self, runtime_key: str) -> bool:
+        return runtime_key in self.warm
+
+    def acquire(self) -> None:
+        assert self.busy_slots < self.spec.slots
+        self.busy_slots += 1
+
+    def release(self) -> None:
+        assert self.busy_slots > 0
+        self.busy_slots -= 1
+
+    def mark_warm(self, runtime_key: str, now: float, max_warm: int = 4
+                  ) -> Optional[str]:
+        """Register a warm instance; returns an evicted key (LRU) if over
+        the memory budget."""
+        self.warm[runtime_key] = now
+        if len(self.warm) > max_warm:
+            lru = min(self.warm, key=self.warm.get)
+            if lru != runtime_key:
+                del self.warm[lru]
+                return lru
+        return None
+
+    def evict(self, runtime_key: str) -> None:
+        self.warm.pop(runtime_key, None)

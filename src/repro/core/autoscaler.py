@@ -1,0 +1,123 @@
+"""Elastic capacity management (§IV-B: "this enables HARDLESS to scale
+workloads based on incoming invocations and offer similar elasticity as
+other computation-oriented serverless systems").
+
+The paper ships scale-to-zero of runtime *instances* (idle eviction in the
+node manager); this module adds the platform half: provisioning and
+draining whole accelerator *nodes* (pods / mesh slices) against queue
+pressure, with a realistic provisioning delay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.core.accelerator import AcceleratorSpec
+from repro.core.cluster import Cluster
+from repro.core.node import NodeManager
+
+
+@dataclasses.dataclass
+class AutoscalerConfig:
+    min_nodes: int = 1
+    max_nodes: int = 8
+    # scale out when queued events per free-able slot exceed this
+    scale_out_queue_per_slot: float = 3.0
+    # scale in when the queue stayed below this for `cooldown` checks
+    scale_in_queue_per_slot: float = 0.5
+    check_interval_s: float = 10.0
+    provision_delay_s: float = 45.0     # slice bring-up / VM boot
+    cooldown_checks: int = 6
+
+
+class Autoscaler:
+    def __init__(self, cluster: Cluster, spec: AcceleratorSpec,
+                 cfg: Optional[AutoscalerConfig] = None,
+                 node_prefix: str = "auto"):
+        self.cluster = cluster
+        self.spec = spec
+        self.cfg = cfg or AutoscalerConfig()
+        self.node_prefix = node_prefix
+        self._n_spawned = 0
+        self._pending = 0               # nodes being provisioned
+        self._calm_checks = 0
+        self.events: List[tuple] = []   # (t, action, detail) audit log
+        self.node_seconds = 0.0         # cost accounting
+        self._last_t = cluster.clock.now()
+        self._running = False
+
+    # ------------------------------------------------------------------
+    @property
+    def managed_nodes(self) -> List[NodeManager]:
+        return [n for n in self.cluster.nodes
+                if n.name.startswith(self.node_prefix)
+                and not getattr(n, "draining", False)]
+
+    def total_slots(self) -> int:
+        return sum(a.spec.slots for n in self.cluster.nodes
+                   if not getattr(n, "draining", False)
+                   for a in n.accelerators)
+
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        if not self._running:
+            self._running = True
+            self.cluster.clock.call_in(self.cfg.check_interval_s, self._tick)
+
+    def stop(self) -> None:
+        self._running = False
+
+    def _account(self) -> None:
+        now = self.cluster.clock.now()
+        dt = now - self._last_t
+        self._last_t = now
+        n_active = len([n for n in self.cluster.nodes
+                        if not getattr(n, "draining", False)])
+        self.node_seconds += dt * n_active
+
+    def _tick(self) -> None:
+        if not self._running:
+            return
+        self._account()
+        depth = len(self.cluster.queue)
+        slots = max(self.total_slots(), 1)
+        pressure = depth / slots
+        n_managed = len(self.managed_nodes) + self._pending
+
+        if pressure > self.cfg.scale_out_queue_per_slot and \
+                n_managed < self.cfg.max_nodes:
+            self._calm_checks = 0
+            self._provision()
+        elif pressure < self.cfg.scale_in_queue_per_slot and \
+                len(self.managed_nodes) > self.cfg.min_nodes:
+            self._calm_checks += 1
+            if self._calm_checks >= self.cfg.cooldown_checks:
+                self._calm_checks = 0
+                self._drain_one()
+        else:
+            self._calm_checks = 0
+        self.cluster.clock.call_in(self.cfg.check_interval_s, self._tick)
+
+    # ------------------------------------------------------------------
+    def _provision(self) -> None:
+        self._pending += 1
+        now = self.cluster.clock.now()
+        self.events.append((now, "provision-start", self._n_spawned))
+
+        def ready():
+            self._pending -= 1
+            name = f"{self.node_prefix}{self._n_spawned}"
+            self._n_spawned += 1
+            node = self.cluster.add_node(name, [self.spec])
+            node.draining = False
+            self.events.append((self.cluster.clock.now(), "node-ready", name))
+            node.try_start_work()
+
+        self.cluster.clock.call_in(self.cfg.provision_delay_s, ready)
+
+    def _drain_one(self) -> None:
+        # drain the managed node with the fewest busy slots
+        cand = min(self.managed_nodes,
+                   key=lambda n: sum(a.busy_slots for a in n.accelerators))
+        cand.draining = True
+        self.events.append((self.cluster.clock.now(), "drain", cand.name))

@@ -1,0 +1,121 @@
+"""Cluster assembly + experiment driver.
+
+``Cluster`` wires queue + object store + runtime registry + node managers
+onto one clock; ``run_workloads`` replays phase workloads and returns the
+metrics collector.  ``paper_testbed`` builds the paper's §V hardware
+(Xeon host, 2x NVIDIA Quadro K600 @ 2 instances each, 1 Intel Movidius NCS)
+with service times calibrated to the paper's measured tiny-YOLOv2 medians.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.accelerator import Accelerator, AcceleratorSpec
+from repro.core.events import Invocation
+from repro.core.metrics import MetricsCollector
+from repro.core.node import NodeManager
+from repro.core.queue import ScannableQueue
+from repro.core.runtime import RuntimeDef, RuntimeRegistry, SimProfile
+from repro.core.scheduler import make_scheduler
+from repro.core.simclock import SimClock
+from repro.core.storage import ObjectStore
+from repro.core.workload import PhaseWorkload
+
+# ----------------------------------------------------------------------
+# Paper-calibrated constants (Hardless §V.B)
+# ----------------------------------------------------------------------
+GPU_K600 = AcceleratorSpec(type="gpu-k600", slots=2, mem_bytes=1 << 30,
+                           cost_per_hour=0.50)
+VPU_NCS = AcceleratorSpec(type="vpu-ncs", slots=1, mem_bytes=512 << 20,
+                          cost_per_hour=0.10)
+TINYYOLO_GPU_ELAT_S = 1.675     # median ELat on K600 (paper §V.B)
+TINYYOLO_VPU_ELAT_S = 1.577     # median ELat on NCS  (paper §V.B)
+
+
+class Cluster:
+    def __init__(self, *, scheduler: str = "warm", clock=None,
+                 invocation_timeout_s: Optional[float] = None,
+                 idle_timeout_s: float = 60.0, max_warm: int = 4,
+                 seed: int = 0):
+        self.clock = clock or SimClock()
+        self.queue = ScannableQueue()
+        self.store = ObjectStore()
+        self.registry = RuntimeRegistry()
+        self.metrics = MetricsCollector()
+        self.nodes: List[NodeManager] = []
+        self._scheduler_name = scheduler
+        self._invocation_timeout = invocation_timeout_s
+        self._idle_timeout = idle_timeout_s
+        self._max_warm = max_warm
+        self._seed = seed
+
+    # -- topology -------------------------------------------------------
+    def add_node(self, name: str, specs: Sequence[AcceleratorSpec]
+                 ) -> NodeManager:
+        accs = [Accelerator(spec=s, local_id=f"{name}/acc{i}")
+                for i, s in enumerate(specs)]
+        node = NodeManager(
+            name, accs, clock=self.clock, queue=self.queue, store=self.store,
+            registry=self.registry, metrics=self.metrics,
+            scheduler=make_scheduler(self._scheduler_name),
+            idle_timeout_s=self._idle_timeout,
+            max_warm=self._max_warm,
+            invocation_timeout_s=self._invocation_timeout,
+            seed=self._seed + len(self.nodes))
+        self.nodes.append(node)
+        return node
+
+    def register_runtime(self, rdef: RuntimeDef) -> None:
+        self.registry.register(rdef)
+        self.store.put(b"\0" * min(rdef.artifact_bytes, 1 << 16),
+                       key=f"runtime:{rdef.runtime_id}")
+
+    # -- client API (the serverless front door) --------------------------
+    def submit(self, inv: Invocation) -> None:
+        inv.r_start = self.clock.now() if inv.r_start is None else inv.r_start
+        self.clock.call_at(inv.r_start,
+                           lambda: self.queue.publish(inv, inv.r_start))
+
+    def run_workloads(self, workloads: Sequence[PhaseWorkload],
+                      extra_time_s: float = 600.0) -> MetricsCollector:
+        horizon = 0.0
+        for wl in workloads:
+            for inv in wl.events():
+                self.submit(inv)
+            horizon = max(horizon, wl.total_duration)
+        self.clock.run(until=horizon + extra_time_s)
+        return self.metrics
+
+    def run(self, until: Optional[float] = None) -> None:
+        self.clock.run(until=until)
+
+
+# ----------------------------------------------------------------------
+# Paper testbed
+# ----------------------------------------------------------------------
+def tinyyolo_runtime() -> RuntimeDef:
+    return RuntimeDef(
+        runtime_id="onnx-tinyyolov2",
+        profiles={
+            "gpu-k600": SimProfile(elat_median_s=TINYYOLO_GPU_ELAT_S,
+                                   sigma=0.05, cold_start_s=3.0),
+            "vpu-ncs": SimProfile(elat_median_s=TINYYOLO_VPU_ELAT_S,
+                                  sigma=0.04, cold_start_s=5.0),
+        },
+        artifact_bytes=60 << 20,
+    )
+
+
+def paper_testbed(*, with_vpu: bool, scheduler: str = "warm",
+                  invocation_timeout_s: Optional[float] = 60.0,
+                  seed: int = 0) -> Cluster:
+    """The §V test environment: one node, 2 GPUs (2 slots each) ± 1 VPU."""
+    cluster = Cluster(scheduler=scheduler,
+                      invocation_timeout_s=invocation_timeout_s, seed=seed)
+    specs = [GPU_K600, GPU_K600] + ([VPU_NCS] if with_vpu else [])
+    cluster.add_node("xeon-host", specs)
+    cluster.register_runtime(tinyyolo_runtime())
+    # a representative input image set in object storage (448 KiB JPEG batch)
+    cluster.store.put(b"\0" * (448 << 10), key="data:voc-images")
+    return cluster

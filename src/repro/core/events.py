@@ -1,0 +1,66 @@
+"""Event / invocation model (Hardless §IV-B).
+
+An event is ``(runtime reference, data-set reference, run configuration)``
+— asynchronous only, no placement control for the submitter.  Timestamps
+follow the paper's measurement protocol (§V-A):
+
+    RStart ≤ NStart ≤ EStart ≤ EEnd ≤ NEnd ≤ REnd
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, Optional
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Invocation:
+    runtime_id: str                 # runtime reference (the "workload")
+    data_ref: str                   # object-store key of the input data
+    config: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    inv_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+    # --- timestamps (seconds on the cluster clock; None = not reached) ---
+    r_start: Optional[float] = None   # client creates the event
+    n_start: Optional[float] = None   # node manager receives it
+    e_start: Optional[float] = None   # execution starts inside the runtime
+    e_end: Optional[float] = None     # execution ends
+    n_end: Optional[float] = None     # node manager has the result
+    r_end: Optional[float] = None     # client has the result
+
+    # --- outcome ---
+    success: bool = False
+    accelerator: Optional[str] = None   # which accelerator ran it
+    node: Optional[str] = None
+    cold_start: bool = False
+    result_ref: Optional[str] = None
+    error: Optional[str] = None
+
+    # ------------------------------------------------------------------
+    @property
+    def runtime_key(self) -> str:
+        """The "same configuration" identity the paper's warm-reuse check
+        uses: runtime + run config (e.g. model variant)."""
+        cfg = ",".join(f"{k}={self.config[k]}" for k in sorted(self.config)
+                       if k not in ("payload",))
+        return f"{self.runtime_id}|{cfg}"
+
+    @property
+    def rlat(self) -> Optional[float]:
+        return None if self.r_end is None else self.r_end - self.r_start
+
+    @property
+    def elat(self) -> Optional[float]:
+        return None if self.e_end is None else self.e_end - self.e_start
+
+    @property
+    def dlat(self) -> Optional[float]:
+        return None if self.e_start is None else self.e_start - self.r_start
+
+    def check_monotone(self) -> bool:
+        ts = [self.r_start, self.n_start, self.e_start, self.e_end,
+              self.n_end, self.r_end]
+        seen = [t for t in ts if t is not None]
+        return all(a <= b for a, b in zip(seen, seen[1:]))

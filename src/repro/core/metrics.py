@@ -1,0 +1,95 @@
+"""Measurement collection (§V-A).
+
+Per-invocation timestamps RStart/NStart/EStart/EEnd/NEnd/REnd plus derived
+RLat / ELat / DLat / RSuccess and RFast (moving average of successful
+completions over the trailing 10 s window), and #queued timelines.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import statistics
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.events import Invocation
+
+RFAST_WINDOW_S = 10.0
+
+
+class MetricsCollector:
+    def __init__(self):
+        self.completed: List[Invocation] = []
+
+    def record(self, inv: Invocation) -> None:
+        assert inv.check_monotone(), f"non-monotone timestamps: {inv}"
+        self.completed.append(inv)
+
+    # ------------------------------------------------------------------
+    @property
+    def successes(self) -> List[Invocation]:
+        return [i for i in self.completed if i.success]
+
+    def r_success(self) -> int:
+        return len(self.successes)
+
+    def rlats(self) -> List[float]:
+        return sorted(i.rlat for i in self.successes if i.rlat is not None)
+
+    def elats(self, accelerator_substr: str = "") -> List[float]:
+        return sorted(i.elat for i in self.successes
+                      if i.elat is not None and
+                      accelerator_substr in (i.accelerator or ""))
+
+    def median_elat(self, accelerator_substr: str = "") -> Optional[float]:
+        e = self.elats(accelerator_substr)
+        return statistics.median(e) if e else None
+
+    def percentile(self, values: List[float], p: float) -> Optional[float]:
+        if not values:
+            return None
+        values = sorted(values)
+        idx = min(int(p / 100.0 * len(values)), len(values) - 1)
+        return values[idx]
+
+    # ------------------------------------------------------------------
+    def rfast_timeline(self, step: float = 1.0,
+                       window: float = RFAST_WINDOW_S
+                       ) -> List[Tuple[float, float]]:
+        """(t, completions in [t-window, t] / window) — per-second moving
+        average of successful completions, the paper's RFast."""
+        ends = sorted(i.r_end for i in self.successes if i.r_end is not None)
+        if not ends:
+            return []
+        out = []
+        t = 0.0
+        t_max = ends[-1] + window
+        while t <= t_max:
+            lo = bisect.bisect_left(ends, t - window)
+            hi = bisect.bisect_right(ends, t)
+            out.append((t, (hi - lo) / window))
+            t += step
+        return out
+
+    def rfast_max(self) -> float:
+        tl = self.rfast_timeline()
+        return max((v for _, v in tl), default=0.0)
+
+    def rfast_mean(self, t0: float, t1: float) -> float:
+        """Steady-state mean RFast over [t0, t1] (e.g. the P1 phase)."""
+        vals = [v for t, v in self.rfast_timeline() if t0 <= t <= t1]
+        return sum(vals) / len(vals) if vals else 0.0
+
+    # ------------------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        rl = self.rlats()
+        el = self.elats()
+        return {
+            "n_completed": len(self.completed),
+            "r_success": self.r_success(),
+            "rfast_max": self.rfast_max(),
+            "rlat_p50": self.percentile(rl, 50) or 0.0,
+            "rlat_p99": self.percentile(rl, 99) or 0.0,
+            "rlat_max": rl[-1] if rl else 0.0,
+            "elat_p50": self.percentile(el, 50) or 0.0,
+            "cold_starts": sum(1 for i in self.completed if i.cold_start),
+        }

@@ -1,0 +1,184 @@
+"""Node manager (§IV-D): owns local accelerators, starts/stops runtime
+instances, pulls invocations from the shared queue, moves data through the
+object store, and signals completion.
+
+The node is written against the cluster clock so identical code drives the
+calibrated simulation and the real-execution mode (where runtime ``fn``
+actually runs JAX and ELat is measured wall time).
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Optional
+
+from repro.core.accelerator import Accelerator, AcceleratorSpec
+from repro.core.events import Invocation
+from repro.core.queue import ScannableQueue
+from repro.core.runtime import RuntimeDef, RuntimeRegistry
+from repro.core.scheduler import Scheduler, WarmAffinityScheduler
+from repro.core.storage import ObjectStore
+
+PICKUP_LATENCY_S = 0.003     # queue -> node RPC
+CLIENT_NOTIFY_S = 0.002      # node -> client completion signal
+
+
+class NodeManager:
+    def __init__(self, name: str, accelerators: List[Accelerator], *,
+                 clock, queue: ScannableQueue, store: ObjectStore,
+                 registry: RuntimeRegistry, metrics,
+                 scheduler: Optional[Scheduler] = None,
+                 idle_timeout_s: float = 60.0, max_warm: int = 4,
+                 invocation_timeout_s: Optional[float] = None,
+                 seed: int = 0):
+        self.name = name
+        self.accelerators = accelerators
+        self.clock = clock
+        self.queue = queue
+        self.store = store
+        self.registry = registry
+        self.metrics = metrics
+        self.scheduler = scheduler or WarmAffinityScheduler()
+        self.idle_timeout = idle_timeout_s
+        self.max_warm = max_warm
+        self.invocation_timeout = invocation_timeout_s
+        self.rng = random.Random(seed)
+        self.n_cold_starts = 0
+        self.n_warm_starts = 0
+        self.draining = False        # set by the autoscaler: finish current
+        #                              work, take no new events
+        self._real_handles: Dict[str, object] = {}   # runtime_key -> setup()
+        queue.subscribe(self._on_publish)
+
+    # ------------------------------------------------------------------
+    @property
+    def acc_types(self):
+        return {a.spec.type for a in self.accelerators}
+
+    def _on_publish(self) -> None:
+        # kick asynchronously so publishing N events wakes the node once each
+        self.clock.call_in(0.0, self.try_start_work)
+
+    # ------------------------------------------------------------------
+    def try_start_work(self) -> None:
+        """Pull work while capacity remains (paper Fig. 1 select loop)."""
+        if self.draining:
+            return
+        while True:
+            picked = self.scheduler.pick(self.queue, self, self.clock.now())
+            if picked is None:
+                return
+            inv, acc = picked
+            if self._expired(inv):
+                self._fail(inv, "timeout-in-queue")
+                continue
+            self._dispatch(inv, acc)
+
+    def _expired(self, inv: Invocation) -> bool:
+        return (self.invocation_timeout is not None and
+                self.clock.now() - inv.r_start > self.invocation_timeout)
+
+    # ------------------------------------------------------------------
+    def _dispatch(self, inv: Invocation, acc: Accelerator) -> None:
+        now = self.clock.now()
+        inv.n_start = now + PICKUP_LATENCY_S
+        inv.node = self.name
+        inv.accelerator = f"{acc.local_id}({acc.spec.type})"
+        acc.acquire()
+        rdef = self.registry.get(inv.runtime_id)
+        prof = rdef.profiles[acc.spec.type]
+
+        warm = acc.has_warm(inv.runtime_key)
+        cold_start = 0.0 if warm else prof.cold_start_s
+        inv.cold_start = not warm
+        if warm:
+            self.n_warm_starts += 1
+        else:
+            self.n_cold_starts += 1
+            evicted = acc.mark_warm(inv.runtime_key, now, self.max_warm)
+            if evicted and evicted in self._real_handles:
+                del self._real_handles[evicted]
+
+        # stateless: fetch the data set before running (§IV-A)
+        fetch = (self.store.transfer_time(inv.data_ref)
+                 if inv.data_ref in self.store else self.store.rtt)
+        inv.e_start = inv.n_start + cold_start + fetch
+
+        if rdef.fn is not None:
+            # real execution: run now (simulation time advances by wall time)
+            data = self.store.get(inv.data_ref) if inv.data_ref in self.store else None
+            if not warm and rdef.setup is not None and \
+                    inv.runtime_key not in self._real_handles:
+                self._real_handles[inv.runtime_key] = rdef.setup()
+            import time as _time
+            t0 = _time.monotonic()
+            try:
+                result = rdef.fn(data, dict(inv.config,
+                                            handle=self._real_handles.get(inv.runtime_key)))
+                err = None
+            except Exception as e:   # execution failure -> unsuccessful event
+                result, err = None, repr(e)
+            elat = _time.monotonic() - t0
+            self.clock.call_at(inv.e_start + elat,
+                               lambda: self._complete(inv, acc, result, err))
+        else:
+            elat = prof.sample_elat(self.rng)
+            self.clock.call_at(inv.e_start + elat,
+                               lambda: self._complete(inv, acc, None, None))
+
+    # ------------------------------------------------------------------
+    def _complete(self, inv: Invocation, acc: Accelerator,
+                  result, err: Optional[str]) -> None:
+        now = self.clock.now()
+        inv.e_end = now
+        rdef = self.registry.get(inv.runtime_id)
+        prof = rdef.profiles[acc.spec.type]
+        if result is not None:
+            inv.result_ref = self.store.put(result)
+        upload = self.store.transfer_time_bytes(prof.result_bytes)
+        inv.n_end = now + upload
+        inv.r_end = inv.n_end + CLIENT_NOTIFY_S
+        inv.error = err
+        inv.success = err is None and not self._expired_at(inv.r_end, inv)
+        acc.mark_warm(inv.runtime_key, now, self.max_warm)
+        acc.total_busy_time += inv.e_end - (inv.e_start or now)
+        acc.n_executions += 1
+        acc.release()
+        self.metrics.record(inv)
+        self.clock.call_in(self.idle_timeout,
+                           lambda: self._maybe_scale_to_zero(acc, inv.runtime_key))
+
+        # paper behaviour: immediately look for a SAME-configuration event
+        # to reuse the live instance, then fall back to the general loop.
+        match = (self.queue.take_matching(inv.runtime_key, now)
+                 if getattr(self.scheduler, "reuse_on_complete", True)
+                 and not self.draining else None)
+        if match is not None:
+            if self._expired(match):
+                self._fail(match, "timeout-in-queue")
+            else:
+                self._dispatch(match, acc)
+        self.try_start_work()
+
+    def _expired_at(self, t: float, inv: Invocation) -> bool:
+        return (self.invocation_timeout is not None and
+                t - inv.r_start > self.invocation_timeout)
+
+    def _fail(self, inv: Invocation, reason: str) -> None:
+        now = self.clock.now()
+        inv.n_start = inv.n_start or now
+        inv.r_end = now
+        inv.success = False
+        inv.error = reason
+        self.metrics.record(inv)
+
+    def _maybe_scale_to_zero(self, acc: Accelerator, runtime_key: str) -> None:
+        t_idle = acc.warm.get(runtime_key)
+        if t_idle is not None and \
+                self.clock.now() - t_idle >= self.idle_timeout - 1e-9:
+            acc.evict(runtime_key)
+            self._real_handles.pop(runtime_key, None)
+
+    # ------------------------------------------------------------------
+    def utilization(self, horizon: float) -> Dict[str, float]:
+        return {a.local_id: a.total_busy_time / max(horizon, 1e-9) / a.spec.slots
+                for a in self.accelerators}

@@ -1,0 +1,77 @@
+"""Scannable shared invocation queue (Bedrock analogue, §IV-C/D).
+
+The two operations the paper requires of the queue:
+
+* ``take_any(supported)``      — fetch the oldest event whose runtime the
+                                 node can run (used when starting new work).
+* ``take_matching(runtime_key)`` — after finishing an invocation, fetch an
+                                 event with the *same configuration* so the
+                                 node reuses the live runtime instance.
+
+Plus ``scan()`` — nodes may inspect the queue *before* taking invocations
+(cold-start-avoiding scheduling policies are built on this).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Iterable, List, Optional, Set
+
+from repro.core.events import Invocation
+
+
+class ScannableQueue:
+    def __init__(self):
+        self._events: "OrderedDict[int, Invocation]" = OrderedDict()
+        self._subscribers: List[Callable[[], None]] = []
+        self.n_published = 0
+        self.n_taken = 0
+        self.depth_timeline: List[tuple] = []   # (t, depth) samples
+
+    # -- publishing ------------------------------------------------------
+    def publish(self, inv: Invocation, now: Optional[float] = None) -> None:
+        self._events[inv.inv_id] = inv
+        self.n_published += 1
+        if now is not None:
+            self.depth_timeline.append((now, len(self._events)))
+        for fn in list(self._subscribers):
+            fn()
+
+    def subscribe(self, fn: Callable[[], None]) -> None:
+        """Node managers subscribe to be kicked on new work."""
+        self._subscribers.append(fn)
+
+    # -- scanning / taking -------------------------------------------------
+    def scan(self) -> Iterable[Invocation]:
+        """Read-only view in arrival order (the paper's queue-scan)."""
+        return self._events.values()
+
+    def _take(self, inv_id: int, now: Optional[float]) -> Invocation:
+        inv = self._events.pop(inv_id)
+        self.n_taken += 1
+        if now is not None:
+            self.depth_timeline.append((now, len(self._events)))
+        return inv
+
+    def take_any(self, supported: Set[str],
+                 now: Optional[float] = None) -> Optional[Invocation]:
+        for inv in self._events.values():
+            if inv.runtime_id in supported:
+                return self._take(inv.inv_id, now)
+        return None
+
+    def take_matching(self, runtime_key: str,
+                      now: Optional[float] = None) -> Optional[Invocation]:
+        for inv in self._events.values():
+            if inv.runtime_key == runtime_key:
+                return self._take(inv.inv_id, now)
+        return None
+
+    def take_where(self, pred: Callable[[Invocation], bool],
+                   now: Optional[float] = None) -> Optional[Invocation]:
+        for inv in self._events.values():
+            if pred(inv):
+                return self._take(inv.inv_id, now)
+        return None
+
+    def __len__(self) -> int:
+        return len(self._events)

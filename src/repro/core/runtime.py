@@ -1,0 +1,69 @@
+"""Runtime environments and execution backends (§IV-A/D).
+
+A :class:`RuntimeDef` is the platform-owned, preconfigured stack (the
+paper's ``python3-PyTorch`` / ONNX): it declares which accelerator types can
+serve it and with what performance profile.  The *user* only ever references
+``runtime_id`` — accelerator selection is the platform's job.
+
+Two execution backends:
+
+* :class:`SimProfile`  — service-time model calibrated to measured numbers
+  (the paper's K600 GPU 1675 ms / NCS VPU 1577 ms medians for tiny-YOLOv2);
+  lognormal jitter, deterministic per-seed.
+* real callables — ``fn(data) -> result`` executing actual JAX on this
+  host; ELat is measured wall time (used by examples/integration tests and
+  the TPU serving engine, where fn is a compiled executable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Any, Callable, Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class SimProfile:
+    """Lognormal service-time model with median ``elat_median_s``."""
+    elat_median_s: float
+    sigma: float = 0.05
+    cold_start_s: float = 2.5       # process spawn + model load
+    result_bytes: int = 65536
+
+    def sample_elat(self, rng: random.Random) -> float:
+        return self.elat_median_s * math.exp(rng.gauss(0.0, self.sigma))
+
+
+@dataclasses.dataclass
+class RuntimeDef:
+    runtime_id: str                  # e.g. "onnx-tinyyolov2", "serve-qwen2.5-14b"
+    # accelerator type -> performance profile (None profile = unsupported)
+    profiles: Dict[str, SimProfile]
+    # real-execution entry point (optional): fn(data, config) -> result
+    fn: Optional[Callable[[Any, Dict[str, Any]], Any]] = None
+    # setup fn for real cold starts (compile/weights); returns a handle
+    setup: Optional[Callable[[], Any]] = None
+    artifact_bytes: int = 60 << 20   # runtime image size in object storage
+
+    def supports(self, acc_type: str) -> bool:
+        return acc_type in self.profiles
+
+
+class RuntimeRegistry:
+    """The object-store-backed runtime catalogue."""
+
+    def __init__(self):
+        self._defs: Dict[str, RuntimeDef] = {}
+
+    def register(self, rdef: RuntimeDef) -> None:
+        self._defs[rdef.runtime_id] = rdef
+
+    def get(self, runtime_id: str) -> RuntimeDef:
+        return self._defs[runtime_id]
+
+    def __contains__(self, runtime_id: str) -> bool:
+        return runtime_id in self._defs
+
+    def supported_on(self, acc_types) -> set:
+        return {rid for rid, rd in self._defs.items()
+                if any(rd.supports(t) for t in acc_types)}

@@ -1,0 +1,113 @@
+"""Event-selection policies.
+
+The paper ships warm-affinity behaviour (scan the queue, prefer events
+whose runtime is already warm; after completion, take a matching event
+first).  FIFO is the ablation baseline; cost-aware is a beyond-paper policy
+exploiting heterogeneous accelerator pricing.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple, TYPE_CHECKING
+
+from repro.core.accelerator import Accelerator
+from repro.core.events import Invocation
+from repro.core.queue import ScannableQueue
+
+if TYPE_CHECKING:
+    from repro.core.node import NodeManager
+
+
+class Scheduler:
+    name = "base"
+    # the paper's "query for a same-configuration event on completion" —
+    # part of the Hardless queue protocol; the naive FIFO baseline lacks it
+    reuse_on_complete = True
+
+    def pick(self, queue: ScannableQueue, node: "NodeManager",
+             now: float) -> Optional[Tuple[Invocation, Accelerator]]:
+        raise NotImplementedError
+
+    # shared helper: accelerators with capacity that support the runtime
+    @staticmethod
+    def _candidates(node: "NodeManager", inv: Invocation) -> List[Accelerator]:
+        rdef = node.registry.get(inv.runtime_id)
+        return [a for a in node.accelerators
+                if a.free_slots > 0 and rdef.supports(a.spec.type)]
+
+
+class FifoScheduler(Scheduler):
+    """Oldest runnable event, first fitting accelerator — fully cold-start
+    blind (the naive baseline the paper's queue-scan behaviour improves)."""
+    name = "fifo"
+    reuse_on_complete = False
+
+    def pick(self, queue, node, now):
+        for inv in queue.scan():
+            if inv.runtime_id not in node.registry:
+                continue
+            accs = self._candidates(node, inv)
+            if accs:
+                queue.take_where(lambda e: e.inv_id == inv.inv_id, now)
+                return inv, accs[0]
+        return None
+
+
+class WarmAffinityScheduler(Scheduler):
+    """The paper's policy: scan for events already warm on this node; fall
+    back to the oldest runnable event (which will cold-start)."""
+    name = "warm"
+
+    def pick(self, queue, node, now):
+        # pass 1: warm match
+        for inv in queue.scan():
+            if inv.runtime_id not in node.registry:
+                continue
+            warm = [a for a in self._candidates(node, inv)
+                    if a.has_warm(inv.runtime_key)]
+            if warm:
+                queue.take_where(lambda e: e.inv_id == inv.inv_id, now)
+                return inv, warm[0]
+        # pass 2: oldest runnable
+        for inv in queue.scan():
+            if inv.runtime_id not in node.registry:
+                continue
+            accs = self._candidates(node, inv)
+            if accs:
+                queue.take_where(lambda e: e.inv_id == inv.inv_id, now)
+                return inv, accs[0]
+        return None
+
+
+class CostAwareScheduler(Scheduler):
+    """Beyond paper: prefer the cheapest accelerator-seconds per event
+    (cost_per_hour x expected ELat), warm instances get a cold-start credit."""
+    name = "cost"
+
+    def pick(self, queue, node, now):
+        best = None
+        for inv in queue.scan():
+            if inv.runtime_id not in node.registry:
+                continue
+            rdef = node.registry.get(inv.runtime_id)
+            for acc in self._candidates(node, inv):
+                prof = rdef.profiles.get(acc.spec.type)
+                elat = prof.elat_median_s if prof else 1.0
+                cold = 0.0 if acc.has_warm(inv.runtime_key) else \
+                    (prof.cold_start_s if prof else 2.0)
+                cost = (elat + cold) * acc.spec.cost_per_hour / 3600.0
+                key = (cost, inv.r_start or 0.0)
+                if best is None or key < best[0]:
+                    best = (key, inv, acc)
+        if best is None:
+            return None
+        _, inv, acc = best
+        queue.take_where(lambda e: e.inv_id == inv.inv_id, now)
+        return inv, acc
+
+
+POLICIES = {c.name: c for c in
+            (FifoScheduler, WarmAffinityScheduler, CostAwareScheduler)}
+
+
+def make_scheduler(name: str) -> Scheduler:
+    return POLICIES[name]()

@@ -1,0 +1,55 @@
+"""Object storage (Minio analogue).
+
+Content-addressed blob store holding runtime definitions, input data and
+results.  Fetch/put latency follows a simple bandwidth + RTT model on the
+cluster clock — the component that turns "stateless workloads must fetch
+data sets before running" (§IV-A) into measurable delivery delay (DLat).
+"""
+from __future__ import annotations
+
+import hashlib
+import pickle
+from typing import Any, Dict, Optional
+
+
+class ObjectStore:
+    def __init__(self, bandwidth_bps: float = 1.25e9, rtt_s: float = 0.002):
+        self._blobs: Dict[str, bytes] = {}
+        self.bandwidth = bandwidth_bps   # 10 GbE default
+        self.rtt = rtt_s
+        self.n_puts = 0
+        self.n_gets = 0
+
+    # -- data plane ----------------------------------------------------
+    def put(self, obj: Any, key: Optional[str] = None) -> str:
+        blob = obj if isinstance(obj, bytes) else pickle.dumps(obj)
+        key = key or ("sha256:" + hashlib.sha256(blob).hexdigest()[:24])
+        self._blobs[key] = blob
+        self.n_puts += 1
+        return key
+
+    def get(self, key: str) -> Any:
+        self.n_gets += 1
+        blob = self._blobs[key]
+        try:
+            return pickle.loads(blob)
+        except Exception:
+            return blob
+
+    def get_raw(self, key: str) -> bytes:
+        self.n_gets += 1
+        return self._blobs[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._blobs
+
+    def size(self, key: str) -> int:
+        return len(self._blobs[key])
+
+    # -- latency model ---------------------------------------------------
+    def transfer_time(self, key: str) -> float:
+        """Seconds to move the blob over the storage network."""
+        return self.rtt + self.size(key) / self.bandwidth
+
+    def transfer_time_bytes(self, nbytes: int) -> float:
+        return self.rtt + nbytes / self.bandwidth

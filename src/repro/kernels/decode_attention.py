@@ -1,0 +1,122 @@
+"""Pallas TPU flash-decode: one query token against a long KV cache.
+
+Grid: (B, KV, n_kv_blocks), kv innermost with (m, l, acc) VMEM scratch.
+The per-sequence valid length arrives via scalar prefetch so fully-invalid
+cache blocks are skipped (ring caches pass kv_len < capacity until wrapped).
+
+q is laid out (B, KV, G, hd): all G query heads sharing a kv head are one
+MXU matmul of shape (G, hd) x (hd, bkv).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_KV = 1024
+
+
+def _decode_kernel(kv_len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, block_kv: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+    valid_len = kv_len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(j * block_kv < valid_len)
+    def _compute():
+        # int8-quantized caches dequantize in VMEM with per-(batch, kv-head)
+        # scales (§Perf C: halves the HBM stream that dominates decode)
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0]  # (bkv, hd)
+        v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G,bkv)
+        kp = j * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kp < valid_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _out():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, *,
+                     softmax_scale: Optional[float] = None,
+                     k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None,
+                     block_kv: int = DEFAULT_BLOCK_KV,
+                     interpret: bool = False) -> jax.Array:
+    """k_scale / v_scale: (B, KV) f32 dequantization scales for int8 caches
+    (None = 1.0; required when k/v dtype is integer)."""
+    B, one, H, hd = q.shape
+    assert one == 1
+    _, S, KV, _ = k.shape
+    G = H // KV
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    if k_scale is None:
+        k_scale = jnp.ones((B, KV), jnp.float32)
+    if v_scale is None:
+        v_scale = jnp.ones((B, KV), jnp.float32)
+
+    hd_p = max(128, -(-hd // 128) * 128)
+    g_p = max(8, -(-G // 8) * 8)                           # sublane alignment
+    bkv = min(block_kv, max(128, -(-S // 128) * 128))
+    s_p = -(-S // bkv) * bkv
+
+    qt = q.reshape(B, KV, G, hd).transpose(0, 1, 2, 3)
+    qt = jnp.pad(qt, ((0, 0), (0, 0), (0, g_p - G), (0, hd_p - hd)))
+    kt = jnp.pad(k, ((0, 0), (0, s_p - S), (0, 0), (0, hd_p - hd))
+                 ).transpose(0, 2, 1, 3)                   # (B,KV,s_p,hd_p)
+    vt = jnp.pad(v, ((0, 0), (0, s_p - S), (0, 0), (0, hd_p - hd))
+                 ).transpose(0, 2, 1, 3)
+
+    grid = (B, KV, s_p // bkv)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_kv=bkv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g_p, hd_p), lambda b, h, j, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, bkv, hd_p), lambda b, h, j, *_: (b, h, j, 0)),
+                pl.BlockSpec((1, 1, bkv, hd_p), lambda b, h, j, *_: (b, h, j, 0)),
+                pl.BlockSpec((1, 1), lambda b, h, j, *_: (b, h)),
+                pl.BlockSpec((1, 1), lambda b, h, j, *_: (b, h)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g_p, hd_p),
+                                   lambda b, h, j, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g_p,), jnp.float32),
+                pltpu.VMEM((g_p,), jnp.float32),
+                pltpu.VMEM((g_p, hd_p), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, g_p, hd_p),
+                                       q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), qt, kt, vt,
+      k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
+    return out[:, :, :G, :hd].reshape(B, 1, H, hd)

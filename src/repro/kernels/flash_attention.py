@@ -1,0 +1,135 @@
+"""Pallas TPU flash attention (prefill) — online-softmax, causal/window/chunk.
+
+Grid: (B, H, n_q_blocks, n_kv_blocks), kv innermost (sequential on TPU) with
+VMEM scratch carrying (m, l, acc) across kv blocks.  Fully-masked kv blocks
+are skipped with ``pl.when`` — this is the triangular-waste fix the pure-jnp
+reference path cannot express (see DESIGN.md §6).
+
+Layout: q (B, Sq, H, hd), k/v (B, Skv, KV, hd); the wrapper transposes to
+head-major, pads sequence to block multiples and hd to a 128 multiple (MXU
+lane alignment), and maps GQA q-heads onto their kv head.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_KV = 512
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: int, chunk: int,
+                 sq: int, skv: int, block_q: int, block_kv: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+    q_off = skv - sq  # queries are the last sq positions of the kv stream
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level reachability (static per grid point except via program_id)
+    q_lo = qi * block_q + q_off          # first absolute q position
+    q_hi = q_lo + block_q - 1
+    k_lo = kj * block_kv
+    k_hi = k_lo + block_kv - 1
+    live = k_lo < skv
+    if causal:
+        live = jnp.logical_and(live, k_lo <= q_hi)
+    if window:
+        live = jnp.logical_and(live, k_hi > q_lo - window)
+    if chunk:
+        live = jnp.logical_and(live, k_hi // chunk >= q_lo // chunk)
+        live = jnp.logical_and(live, k_lo // chunk <= q_hi // chunk)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bkv, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qp = q_lo - q_off + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + q_off
+        kp = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kp < skv
+        if causal:
+            mask &= kp <= qp
+        if window:
+            mask &= kp > qp - window
+        if chunk:
+            mask &= (kp // chunk) == (qp // chunk)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _out():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, chunk: int = 0,
+                    softmax_scale: Optional[float] = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_kv: int = DEFAULT_BLOCK_KV,
+                    interpret: bool = False) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+
+    hd_p = max(128, -(-hd // 128) * 128)
+    bq = min(block_q, max(128, -(-Sq // 128) * 128))
+    bkv = min(block_kv, max(128, -(-Skv // 128) * 128))
+    sq_p = -(-Sq // bq) * bq
+    skv_p = -(-Skv // bkv) * bkv
+
+    def pad_to(x, s, h):
+        return jnp.pad(x, ((0, 0), (0, s - x.shape[1]), (0, 0),
+                           (0, h - x.shape[3])))
+
+    qt = pad_to(q, sq_p, hd_p).transpose(0, 2, 1, 3)       # (B,H,sq,hd)
+    kt = pad_to(k, skv_p, hd_p).transpose(0, 2, 1, 3)       # (B,KV,skv,hd)
+    vt = pad_to(v, skv_p, hd_p).transpose(0, 2, 1, 3)
+
+    grid = (B, H, sq_p // bq, skv_p // bkv)
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window, chunk=chunk,
+        sq=Sq, skv=Skv, block_q=bq, block_kv=bkv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd_p), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, hd_p), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bkv, hd_p), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd_p), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, sq_p, hd_p), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd_p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)[:, :Sq, :, :hd]

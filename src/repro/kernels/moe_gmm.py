@@ -1,0 +1,108 @@
+"""Pallas TPU grouped (expert) matmul — megablocks-style with group-aligned
+row padding.
+
+``moe_gmm(x, w, group_sizes)`` matches ``jax.lax.ragged_dot`` semantics:
+rows of ``x`` are sorted by expert, ``group_sizes[e]`` rows belong to expert
+``e``.  The wrapper scatters each group to a block-multiple offset so every
+row-tile belongs to exactly ONE expert; a prefetched tile→expert map drives
+the rhs BlockSpec index_map, so expert weights stream from HBM only for
+tiles that need them.  Grid: (m_tiles, n_tiles, k_tiles) with a VMEM f32
+accumulator over k.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BK = 512
+DEFAULT_BN = 256
+
+
+def _gmm_kernel(emap_ref, nrows_ref, x_ref, w_ref, o_ref, acc_scr, *,
+                block_m: int):
+    mi = pl.program_id(0)
+    ki = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(mi * block_m < nrows_ref[0])
+    def _compute():
+        acc_scr[...] += jax.lax.dot(
+            x_ref[...].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _out():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def moe_gmm(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
+            block_m: int = DEFAULT_BM, block_k: int = DEFAULT_BK,
+            block_n: int = DEFAULT_BN, interpret: bool = False) -> jax.Array:
+    T, K = x.shape
+    E, _, N = w.shape
+    bm = min(block_m, max(8, -(-T // 8) * 8))
+    bk = min(block_k, max(128, -(-K // 128) * 128))
+    bn = min(block_n, max(128, -(-N // 128) * 128))
+
+    # ---- group-aligned padding (static worst case: T + E*(bm-1) rows) ----
+    gs = group_sizes.astype(jnp.int32)
+    padded_sizes = -(-gs // bm) * bm
+    padded_starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(padded_sizes)[:-1]])
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(gs)[:-1]])
+    Mp = -(-T // bm) * bm + E * bm                      # static upper bound
+    rows = jnp.arange(T, dtype=jnp.int32)
+    # expert of each source row, then its padded destination
+    expert_of_row = jnp.searchsorted(jnp.cumsum(gs), rows, side="right"
+                                     ).astype(jnp.int32)
+    dst = padded_starts[expert_of_row] + (rows - starts[expert_of_row])
+    xp = jnp.zeros((Mp, K), x.dtype).at[dst].set(x)
+
+    # tile -> expert map (prefetched scalars; dead tiles point at expert 0)
+    n_m_tiles = Mp // bm
+    tile_starts = jnp.arange(n_m_tiles, dtype=jnp.int32) * bm
+    total_rows = jnp.sum(padded_sizes)
+    emap = jnp.searchsorted(jnp.cumsum(padded_sizes), tile_starts,
+                            side="right").astype(jnp.int32)
+    emap = jnp.minimum(emap, E - 1)
+    nrows = total_rows.reshape(1)
+
+    Kp, Np = -(-K // bk) * bk, -(-N // bn) * bn
+    if Kp != K:
+        xp = jnp.pad(xp, ((0, 0), (0, Kp - K)))
+    wp = jnp.pad(w, ((0, 0), (0, Kp - K), (0, Np - N)))
+
+    grid = (n_m_tiles, Np // bn, Kp // bk)
+    kernel = functools.partial(_gmm_kernel, block_m=bm)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda mi, ni, ki, emap, nr: (mi, ki)),
+                pl.BlockSpec((1, bk, bn),
+                             lambda mi, ni, ki, emap, nr: (emap[mi], ki, ni)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn),
+                                   lambda mi, ni, ki, emap, nr: (mi, ni)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        interpret=interpret,
+    )(emap, nrows, xp, wp)
+
+    # gather rows back to the unpadded layout
+    return jnp.take(out, dst, axis=0)[:, :N]

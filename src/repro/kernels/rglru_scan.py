@@ -1,0 +1,77 @@
+"""Pallas TPU RG-LRU linear-recurrence scan.
+
+h_t = a_t * h_{t-1} + b_t   (diagonal; RecurrentGemma/Griffin core)
+
+TPU adaptation (DESIGN.md §6): GPU implementations use a warp-level chunked
+scan; on TPU we block the feature dim across the grid and keep the time
+recurrence *sequential inside* each kernel invocation — the (bs, bd) tile is
+VMEM-resident, the inner loop is pure VPU work, and the carried state h
+lives in a VMEM scratch that persists across sequential time-blocks of the
+grid.  Grid: (B, n_d_blocks, n_s_blocks), time innermost.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 256
+DEFAULT_BLOCK_D = 512
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, h_scr, *, block_s: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)      # (bs, bd)
+    b = b_ref[0].astype(jnp.float32)
+    h = h_scr[...]                        # (1, bd) carried state
+
+    def step(t, carry):
+        h, out = carry
+        h = a[t][None] * h + b[t][None]
+        out = jax.lax.dynamic_update_slice_in_dim(out, h, t, axis=0)
+        return h, out
+
+    out0 = jnp.zeros_like(a)
+    h, out = jax.lax.fori_loop(0, block_s, step, (h, out0))
+    h_scr[...] = h
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def rglru_scan(a: jax.Array, b: jax.Array,
+               h0: Optional[jax.Array] = None, *,
+               block_s: int = DEFAULT_BLOCK_S, block_d: int = DEFAULT_BLOCK_D,
+               interpret: bool = False) -> jax.Array:
+    """a, b: (B, S, D); h0: (B, D) or None. Returns h: (B, S, D) f32."""
+    B, S, D = a.shape
+    bs = min(block_s, max(8, -(-S // 8) * 8))
+    bd = min(block_d, max(128, -(-D // 128) * 128))
+    Sp, Dp = -(-S // bs) * bs, -(-D // bd) * bd
+    ap = jnp.pad(a, ((0, 0), (0, Sp - S), (0, Dp - D)))
+    bp = jnp.pad(b, ((0, 0), (0, Sp - S), (0, Dp - D)))
+    h0p = (jnp.zeros((B, 1, Dp), jnp.float32) if h0 is None
+           else jnp.pad(h0.astype(jnp.float32)[:, None], ((0, 0), (0, 0), (0, Dp - D))))
+
+    grid = (B, Dp // bd, Sp // bs)
+    out = pl.pallas_call(
+        functools.partial(_rglru_kernel, block_s=bs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, bd), lambda bi, di, si: (bi, si, di)),
+            pl.BlockSpec((1, bs, bd), lambda bi, di, si: (bi, si, di)),
+            pl.BlockSpec((1, 1, bd), lambda bi, di, si: (bi, 0, di)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bd), lambda bi, di, si: (bi, si, di)),
+        out_shape=jax.ShapeDtypeStruct((B, Sp, Dp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+        interpret=interpret,
+    )(ap, bp, h0p)
+    return out[:, :S, :D]

@@ -1,0 +1,76 @@
+"""Training launcher.
+
+Real execution on this host uses the 1-device mesh with a reduced config;
+full-size configs on the production mesh are exercised through
+``repro.launch.dryrun`` (ShapeDtypeStructs; this container has one CPU).
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --steps 20 --batch 4 --seq 64 [--full-config]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.storage import ObjectStore
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.train import checkpoint as C
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_loop import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full-size config (requires real TPUs)")
+    ap.add_argument("--ckpt-tag", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    print(f"arch={cfg.name} params={cfg.n_params/1e6:.1f}M "
+          f"devices={jax.device_count()}")
+
+    mesh = make_host_mesh()
+    ocfg = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 10),
+                       total_steps=args.steps)
+    step_fn, p_shard, o_shard, _ = make_train_step(cfg, ocfg, mesh,
+                                                   remat=True, donate=False)
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    state = init_opt_state(ocfg, params)
+    pipe = TokenPipeline(PipelineConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                        global_batch=args.batch))
+    store = ObjectStore()
+    t0 = time.perf_counter()
+    for step in range(1, args.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+        if cfg.n_frames:
+            batch["frames"] = jnp.zeros((args.batch, cfg.n_frames,
+                                         cfg.d_model), jnp.float32)
+        if cfg.n_patches:
+            batch["patches"] = jnp.zeros((args.batch, cfg.n_patches,
+                                          cfg.d_model), jnp.float32)
+        params, state, metrics = step_fn(params, state, batch)
+        if step % 5 == 0 or step == 1:
+            print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
+                  f"({(time.perf_counter()-t0)/step:.2f}s/step)", flush=True)
+    if args.ckpt_tag:
+        C.save(store, args.ckpt_tag, args.steps, params)
+        print(f"checkpointed {args.ckpt_tag}@{args.steps}")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

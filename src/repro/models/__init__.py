@@ -1,0 +1,1 @@
+"""Model zoo: pattern-tiled transformer/recurrent architectures."""

@@ -1,0 +1,77 @@
+"""Shared neural-net layers: RMSNorm, RoPE, SwiGLU MLP, embeddings."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import Spec
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, hd) or (..., H, hd) with pos (..., S)/(...,).
+
+    pos broadcasts against x's sequence dims; hd must be even.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = pos[..., None, None].astype(jnp.float32) * freq  # (..., S, 1, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_specs(d: int, f: int) -> Dict[str, Spec]:
+    return {
+        "wg": Spec((d, f), ("embed", "ff")),
+        "wu": Spec((d, f), ("embed", "ff")),
+        "wd": Spec((f, d), ("ff", "embed")),
+    }
+
+
+def mlp(params, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, params["wg"])
+    u = jnp.einsum("...d,df->...f", x, params["wu"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["wd"])
+
+
+def embed_specs(vocab: int, d: int, tie: bool) -> Dict[str, Spec]:
+    specs = {"tok": Spec((vocab, d), ("vocab", "embed"), scale=0.02)}
+    if not tie:
+        specs["head"] = Spec((d, vocab), ("embed", "vocab"))
+    return specs
+
+
+def embed(params, tokens: jax.Array, d: int) -> jax.Array:
+    out = jnp.take(params["tok"], tokens, axis=0)
+    return out * jnp.asarray(d ** 0.5, out.dtype)
+
+
+def unembed(params, x: jax.Array, tie: bool) -> jax.Array:
+    w = params["tok"].T if tie else params["head"]
+    return jnp.einsum("...d,dv->...v", x, w,
+                      preferred_element_type=jnp.float32)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy; logits (..., V) f32, labels (...,) int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

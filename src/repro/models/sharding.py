@@ -1,0 +1,164 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style, divisibility-safe).
+
+Rules map logical axis names to one mesh axis (or a tuple).  A mesh axis is
+only applied when it evenly divides the dimension — otherwise the dim falls
+back to replication — so every (arch × shape × mesh) combination lowers, even
+whisper-tiny's 6 heads on a 16-way model axis.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.param import tree_map_specs, Spec
+
+AxisRule = Union[None, str, Tuple[str, ...]]
+
+# ----------------------------------------------------------------------
+# Trace-time sharding context: model code calls constrain(x, *axes) and the
+# launcher activates (mesh, rules) around tracing. No-op outside a context,
+# so smoke tests and 1-device runs are untouched.
+# ----------------------------------------------------------------------
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Dict[str, AxisRule]):
+    prev = getattr(_CTX, "value", None)
+    _CTX.value = (mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.value = prev
+
+
+def current_rules():
+    return getattr(_CTX, "value", None)
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names (context-driven)."""
+    ctx = current_rules()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if np.prod(mesh.devices.shape) == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(x.shape, axes, rules, mesh)))
+
+
+# Default logical->physical rules. "fsdp" axes shard weights along the data
+# (and pod) axis — ZeRO-3 style; "batch" covers activations and inputs.
+TRAIN_RULES: Dict[str, AxisRule] = {
+    "batch": ("pod", "data"),
+    "embed": ("pod", "data"),   # FSDP weight sharding
+    "heads": "model",            # fused H*hd dims
+    "kv": "model",
+    "ff": "model",
+    # experts replicated by default (ff dim carries the model axis); the
+    # expert-parallel all-to-all layout is the §Perf alternative
+    "experts": None,
+    "vocab": "model",
+    "layers": None,
+    "seq": None,
+    "kv_seq": "model",           # KV-cache sequence dim (decode)
+    "state": None,               # recurrent state feature dims
+}
+
+# Serving: small models keep weights replicated along data for latency;
+# big models need FSDP-style storage too. We keep one rule table and let the
+# per-dim divisibility fallback do the rest; weights' "embed" FSDP is
+# controlled by the caller (see rules_for).
+SERVE_RULES = dict(TRAIN_RULES)
+
+
+def rules_for(kind: str, fsdp: bool = True, no_tp: bool = False,
+              moe_a2a: bool = False) -> Dict[str, AxisRule]:
+    rules = dict(TRAIN_RULES)
+    if kind != "train" and not fsdp:
+        rules["embed"] = None
+    if no_tp:
+        # §Perf variant: pure FSDP — the batch shards over EVERY axis (the
+        # ex-model axis becomes extra data parallelism), weights ZeRO-3
+        # shard over all axes, no Megatron activation all-reduces; vocab TP
+        # is kept (one tiny logsumexp AR instead of per-layer ones).
+        rules["batch"] = ("pod", "data", "model")
+        rules["embed"] = ("pod", "data", "model")
+        rules["heads"] = None
+        rules["kv"] = None
+        rules["ff"] = None
+        rules["state"] = None
+    if moe_a2a:
+        rules["_moe_a2a"] = True     # read by blocks.moe_ffn
+        rules["experts"] = "model"   # one expert per model-axis chip
+    return rules
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             rules: Dict[str, AxisRule], mesh: Mesh) -> P:
+    """Build a PartitionSpec, dropping mesh axes that do not divide dims or
+    that are already used by an earlier dim."""
+    sizes = _mesh_axis_sizes(mesh)
+    used = set()
+    out = []
+    for dim, logical in zip(shape, axes):
+        if logical is None or logical not in rules or rules[logical] is None:
+            out.append(None)
+            continue
+        rule = rules[logical]
+        cand = (rule,) if isinstance(rule, str) else tuple(rule)
+        picked = []
+        rem = dim
+        for ax in cand:
+            if ax in used or ax not in sizes:
+                continue
+            if rem % sizes[ax] == 0:
+                picked.append(ax)
+                rem //= sizes[ax]
+        if picked:
+            used.update(picked)
+            out.append(tuple(picked) if len(picked) > 1 else picked[0])
+        else:
+            out.append(None)
+    # strip trailing Nones for tidiness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_shardings(specs, rules: Dict[str, AxisRule], mesh: Mesh):
+    """NamedSharding tree matching a param spec tree."""
+    return tree_map_specs(
+        lambda s: NamedSharding(mesh, spec_for(s.shape, s.axes, rules, mesh)),
+        specs)
+
+
+def param_pspecs(specs, rules: Dict[str, AxisRule], mesh: Mesh):
+    return tree_map_specs(lambda s: spec_for(s.shape, s.axes, rules, mesh), specs)
+
+
+def shard_activation(x: jax.Array, axes: Sequence[Optional[str]],
+                     rules: Dict[str, AxisRule], mesh: Optional[Mesh]):
+    """with_sharding_constraint by logical axes; no-op outside a mesh or on
+    a 1-device mesh (keeps smoke tests on CPU clean)."""
+    if mesh is None or mesh.empty or np.prod(mesh.devices.shape) == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(x.shape, axes, rules, mesh)))
+
+
+def batch_sharding(shape: Sequence[int], mesh: Mesh,
+                   rules: Dict[str, AxisRule]) -> NamedSharding:
+    """Sharding for an input batch tensor: dim0 = batch, rest replicated."""
+    axes = ["batch"] + [None] * (len(shape) - 1)
+    return NamedSharding(mesh, spec_for(shape, axes, rules, mesh))

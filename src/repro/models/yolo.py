@@ -1,0 +1,58 @@
+"""tiny-YOLOv2 backbone — the paper's evaluation workload (Hardless §V).
+
+A compact conv detection net (9 conv layers, VOC-20 head: 13x13x125 output)
+so the Fig. 3/4 reproduction can run *real* forward passes in real-execution
+mode. Weight layout follows the ONNX tinyyolov2 graph shape-for-shape.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import Spec, init_params
+
+# (out_channels) per conv layer; maxpool-2 after layers 0..5 (stride 1 pool
+# after layer 5 in the original; we use stride 2 for the first five).
+_CHANNELS = [16, 32, 64, 128, 256, 512, 1024, 1024]
+_HEAD_OUT = 125  # 5 boxes x (20 classes + 5)
+
+
+def yolo_specs(in_ch: int = 3) -> Dict[str, Spec]:
+    specs: Dict[str, Spec] = {}
+    c_in = in_ch
+    for i, c_out in enumerate(_CHANNELS):
+        specs[f"conv{i}"] = Spec((3, 3, c_in, c_out), (None, None, None, None),
+                                 scale=0.05)
+        specs[f"scale{i}"] = Spec((c_out,), (None,), init="ones")
+        specs[f"bias{i}"] = Spec((c_out,), (None,), init="zeros")
+        c_in = c_out
+    specs["head"] = Spec((1, 1, c_in, _HEAD_OUT), (None, None, None, None),
+                         scale=0.05)
+    specs["head_b"] = Spec((_HEAD_OUT,), (None,), init="zeros")
+    return specs
+
+
+def init_yolo_params(key: jax.Array, dtype: str = "float32"):
+    return init_params(yolo_specs(), key, dtype)
+
+
+def yolo_forward(params, images: jax.Array) -> jax.Array:
+    """images: (B, H, W, 3), H = W = 416 for the real model.
+    Returns (B, H/32, W/32, 125)."""
+    x = images
+    for i in range(len(_CHANNELS)):
+        x = jax.lax.conv_general_dilated(
+            x, params[f"conv{i}"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        # batch-norm folded into scale/bias (inference form)
+        x = x * params[f"scale{i}"] + params[f"bias{i}"]
+        x = jnp.where(x > 0, x, 0.1 * x)  # leaky relu
+        if i < 5:
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
+    x = jax.lax.conv_general_dilated(
+        x, params["head"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return x + params["head_b"]

@@ -1,0 +1,140 @@
+"""Three-term roofline from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs   / (chips x peak_FLOP/s)
+    memory     = HLO_bytes   / (chips x HBM_bw)
+    collective = coll_bytes  / (chips x link_bw)
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI. MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.roofline.hlo import collective_bytes
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    """All hlo_*/coll_* quantities are PER CHIP: ``cost_analysis()`` and the
+    compiled HLO text describe the partitioned (per-device) module — verified
+    empirically (replicated matmul reports full flops per device, sharded
+    reports the 1/n share).  Whole-program totals are chips x per-chip.
+    The spec formula  term = total / (chips x bw)  is therefore computed as
+    per_chip / bw."""
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float              # per-chip FLOPs
+    hlo_bytes: float              # per-chip HBM traffic
+    coll_bytes: float             # per-chip collective payload
+    coll_breakdown: Dict[str, int]
+    coll_counts: Dict[str, int]
+    model_flops: float            # whole-model useful FLOPs (all chips)
+    bytes_per_device: Optional[float] = None   # peak HBM from memory_analysis
+    # fusion-aware analytic HBM bytes/chip (roofline/analytic.py); the raw
+    # hlo_bytes from the unfused CPU pipeline is kept as an upper bound
+    model_bytes: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        b = self.model_bytes if self.model_bytes is not None else self.hlo_bytes
+        return b / HBM_BW
+
+    @property
+    def t_memory_unfused(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def effective_coll_bytes(self) -> float:
+        """Physical link traffic: a ring all-reduce moves ~2x its payload
+        ((2(n-1)/n) vs (n-1)/n for all-gather/reduce-scatter); payload-only
+        sums would make reduce-scatter+all-gather look *worse* than the
+        all-reduce they replace."""
+        if self.coll_breakdown:
+            return float(sum(v * (2.0 if k == "all-reduce" else 1.0)
+                             for k, v in self.coll_breakdown.items()))
+        return self.coll_bytes
+
+    @property
+    def t_collective(self) -> float:
+        return self.effective_coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def total_hlo_flops(self) -> float:
+        return self.hlo_flops * self.chips
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        return (self.model_flops / self.total_hlo_flops
+                if self.hlo_flops else 0.0)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step-time estimate: max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline estimate."""
+        denom = self.step_time * self.chips * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the dominant term is to pure-compute ideal: ideal
+        compute time of MODEL_FLOPS vs the roofline step estimate."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.step_time if self.step_time else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, dominant=self.dominant,
+                 useful_ratio=self.useful_ratio, step_time=self.step_time,
+                 mfu=self.mfu, total_hlo_flops=self.total_hlo_flops,
+                 roofline_fraction=self.roofline_fraction,
+                 t_memory_unfused=self.t_memory_unfused)
+        return d
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference steps."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * cfg.n_active_params * tokens
+
+
+def build_report(cfg: ModelConfig, shape: InputShape, mesh_name: str,
+                 chips: int, cost: dict, hlo_text: str,
+                 bytes_per_device: Optional[float] = None) -> RooflineReport:
+    total, per_type, counts = collective_bytes(hlo_text)
+    return RooflineReport(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=float(cost.get("flops", 0.0)),
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+        coll_bytes=float(total),
+        coll_breakdown=per_type, coll_counts=counts,
+        model_flops=model_flops(cfg, shape),
+        bytes_per_device=bytes_per_device,
+    )

@@ -1,0 +1,65 @@
+"""HLO text analysis: collective-traffic extraction.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so we parse the
+(stable)HLO/optimized-HLO text and sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[16,4096,5120]{2,1,0} all-gather(...)
+#       ROOT %tuple ... (f32[8]{0}, bf16[2,4]{1,0}) all-to-all(...)
+_LINE_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[^\s]+)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]+[0-9]*(?:e[0-9]m[0-9](?:fn)?)?)\[(?P<dims>[0-9,]*)\]")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int], Dict[str, int]]:
+    """(total_bytes, bytes_per_op_type, count_per_op_type).
+
+    Bytes = result-shape payload of each collective instruction ("operand
+    size" in the roofline sense). ``-done`` halves of async pairs are
+    skipped to avoid double counting.
+    """
+    per_type: Dict[str, int] = {c: 0 for c in COLLECTIVES}
+    counts: Dict[str, int] = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "-done." in line:
+            continue
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        b = shape_bytes(m.group("result"))
+        per_type[op] += b
+        counts[op] += 1
+    return sum(per_type.values()), per_type, counts

@@ -1,0 +1,137 @@
+"""Serving engine: slot-based continuous batching over a shared KV cache.
+
+One engine = one (architecture, mesh) "runtime instance" in Hardless terms:
+cold start is jit compilation + weight materialization; after that the
+engine serves events (batches of generation requests) from the node manager.
+
+Requests occupy decode *slots*; prefill runs per-request (B=1) and the
+resulting cache is written into the slot along the batch axis, so new
+requests join while other slots keep decoding — continuous batching without
+recompiling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import EOS, PAD
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    req_id: int = 0
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _slot_batch_axis(path) -> int:
+    """Cache leaves under blocks/ are (n_periods, B, ...); others (B, ...)."""
+    return 1 if any(getattr(p, "key", None) == "blocks" for p in path) else 0
+
+
+def write_slot(cache, slot_cache, idx: int):
+    """Insert a B=1 cache into slot ``idx`` of the engine cache."""
+    flat_c, treedef = jax.tree.flatten_with_path(cache)
+    flat_s = [l for _, l in jax.tree.flatten_with_path(slot_cache)[0]]
+    out = []
+    for (path, big), small in zip(flat_c, flat_s):
+        ax = _slot_batch_axis(path)
+        out.append(jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), idx, axis=ax))
+    return jax.tree.unflatten(treedef, out)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
+                 max_len: int = 256, impl: Optional[str] = None,
+                 greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.impl = impl
+        self.greedy = greedy
+
+        self.cache = M.init_cache(cfg, max_slots, max_len)
+        self.pos = np.zeros((max_slots,), np.int32)
+        self.active: List[Optional[Request]] = [None] * max_slots
+        self.last_token = np.zeros((max_slots,), np.int32)
+        self.n_prefills = 0
+        self.n_decode_steps = 0
+
+        self._decode = jax.jit(functools.partial(M.decode_step, cfg,
+                                                 impl=impl))
+        self._prefill = jax.jit(
+            functools.partial(M.prefill, cfg, cache_len=max_len, impl=impl),
+            static_argnames=())
+        self._write_slot = jax.jit(write_slot, static_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def admit(self, req: Request) -> bool:
+        slots = self.free_slots()
+        if not slots:
+            return False
+        slot = slots[0]
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        batch = {"tokens": prompt}
+        logits, slot_cache = self._prefill(self.params, batch)
+        self.cache = self._write_slot(self.cache, slot_cache, slot)
+        tok = int(jnp.argmax(logits[0, -1])) if self.greedy else \
+            int(jax.random.categorical(jax.random.PRNGKey(req.req_id),
+                                       logits[0, -1]))
+        req.output.append(tok)
+        self.active[slot] = req
+        self.pos[slot] = len(req.prompt)
+        self.last_token[slot] = tok
+        self.n_prefills += 1
+        return True
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Request]:
+        """One decode step for all active slots; returns finished requests."""
+        if all(r is None for r in self.active):
+            return []
+        tokens = jnp.asarray(self.last_token, jnp.int32)[:, None]
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, tokens, pos)
+        next_tok = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        self.n_decode_steps += 1
+
+        finished = []
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[i] += 1
+            tok = int(next_tok[i])
+            req.output.append(tok)
+            self.last_token[i] = tok
+            if tok == EOS or len(req.output) >= req.max_new_tokens or \
+                    int(self.pos[i]) >= self.max_len - 1:
+                req.done = True
+                finished.append(req)
+                self.active[i] = None
+        return finished
+
+    # ------------------------------------------------------------------
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Serve a list of requests to completion (continuous batching)."""
+        waiting = list(requests)
+        done: List[Request] = []
+        while waiting or any(r is not None for r in self.active):
+            while waiting and self.free_slots():
+                self.admit(waiting.pop(0))
+            done.extend(self.step())
+        return done

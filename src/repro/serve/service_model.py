@@ -1,0 +1,68 @@
+"""Roofline-calibrated service-time profiles (beyond paper).
+
+The cluster simulator needs per-accelerator ELat models for full-size
+architectures that cannot execute on this host. Instead of inventing
+numbers, we derive them from the dry-run's roofline terms: a serving event
+costs one prefill step plus ``new_tokens`` decode steps, each bounded by
+max(compute, memory, collective) of the compiled program — so scheduler
+experiments on "v5e pods serving grok-1" use the same analysis that the
+§Roofline table reports.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, SHAPES
+from repro.core.runtime import SimProfile
+
+SWEEP = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                     "results", "dryrun_all.json")
+_CACHE: Optional[Dict] = None
+
+
+def _sweep_rows():
+    global _CACHE
+    if _CACHE is None:
+        path = os.path.abspath(SWEEP)
+        if os.path.exists(path):
+            with open(path) as f:
+                _CACHE = {(r["arch"], r["shape"], r["mesh"]): r
+                          for r in json.load(f) if r.get("status") == "ok"}
+        else:
+            _CACHE = {}
+    return _CACHE
+
+
+def step_time(arch: str, shape: str, mesh: str = "single"
+              ) -> Optional[float]:
+    row = _sweep_rows().get((arch, shape, mesh))
+    if row is None:
+        return None
+    return row["report"]["step_time"]
+
+
+def roofline_profile(cfg: ModelConfig, *, batch: int = 4,
+                     new_tokens: int = 16, prompt_len: int = 512,
+                     cold_start_s: float = 20.0) -> SimProfile:
+    """ELat model: prefill (scaled from the 32k dry-run by prompt length,
+    quadratic attention term approximated linearly) + new_tokens decodes."""
+    t_prefill = step_time(cfg.name, "prefill_32k")
+    t_decode = step_time(cfg.name, "decode_32k")
+    if t_prefill is None or t_decode is None:
+        # analytic fallback: 2*N_active*D / cluster flops at 40% MFU
+        peak = 197e12 * 256 * 0.4
+        t_prefill = 2 * cfg.n_active_params * batch * prompt_len / peak
+        t_decode = max(2 * cfg.n_active_params * batch / peak, 2e-4)
+    else:
+        shp = SHAPES["prefill_32k"]
+        t_prefill = t_prefill * (batch / shp.global_batch) \
+            * (prompt_len / shp.seq_len)
+        t_decode = t_decode * (batch / SHAPES["decode_32k"].global_batch)
+    elat = t_prefill + new_tokens * t_decode
+    # cold start: weight fetch over the storage network + compile cache miss
+    load_s = cfg.n_params * 2 / 1.25e9 / 16  # striped over 16 hosts
+    return SimProfile(elat_median_s=max(elat, 1e-4), sigma=0.08,
+                      cold_start_s=cold_start_s + load_s,
+                      result_bytes=batch * new_tokens * 4)

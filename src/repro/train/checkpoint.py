@@ -1,0 +1,71 @@
+"""Checkpointing into the Hardless object store.
+
+Each leaf is serialized as a raw npy blob under a path key; the manifest
+ties a step number to the leaf set.  This is the serverless-native analogue
+of a checkpoint directory: runtimes reference ``ckpt:<tag>/<step>`` as their
+"data set" and nodes fetch it through the same object store as any event
+payload (fetch latency is modeled/measured identically).
+"""
+from __future__ import annotations
+
+import io
+import json
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.storage import ObjectStore
+
+
+def _leaf_key(tag: str, step: int, path: str) -> str:
+    return f"ckpt:{tag}/{step}/{path}"
+
+
+def _paths(tree) -> list:
+    flat, _ = jax.tree.flatten_with_path(tree)
+    return ["/".join(str(p) for p in path) for path, _ in flat]
+
+
+def save(store: ObjectStore, tag: str, step: int, tree: Any) -> str:
+    flat, _ = jax.tree.flatten_with_path(tree)
+    manifest = {"step": step, "leaves": [], "dtypes": {}}
+    for path, leaf in flat:
+        pstr = "/".join(str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":  # bfloat16 etc: upcast losslessly
+            manifest["dtypes"][pstr] = str(leaf.dtype)
+            arr = np.asarray(jax.numpy.asarray(leaf).astype(jax.numpy.float32))
+        buf = io.BytesIO()
+        np.save(buf, arr, allow_pickle=False)
+        store.put(buf.getvalue(), key=_leaf_key(tag, step, pstr))
+        manifest["leaves"].append(pstr)
+    key = f"ckpt:{tag}/{step}/MANIFEST"
+    store.put(json.dumps(manifest).encode(), key=key)
+    store.put(json.dumps({"latest": step}).encode(), key=f"ckpt:{tag}/LATEST")
+    return key
+
+
+def latest_step(store: ObjectStore, tag: str) -> Optional[int]:
+    key = f"ckpt:{tag}/LATEST"
+    if key not in store:
+        return None
+    return json.loads(store.get_raw(key).decode())["latest"]
+
+
+def restore(store: ObjectStore, tag: str, step: int, like: Any) -> Any:
+    """Restore into the structure (dtype, shardings via device_put) of
+    ``like`` — a pytree of arrays or ShapeDtypeStructs."""
+    flat, treedef = jax.tree.flatten_with_path(like)
+    leaves = []
+    for path, proto in flat:
+        pstr = "/".join(str(p) for p in path)
+        raw = store.get_raw(_leaf_key(tag, step, pstr))
+        arr = jax.numpy.asarray(np.load(io.BytesIO(raw), allow_pickle=False))
+        if arr.dtype != proto.dtype:
+            arr = arr.astype(proto.dtype)   # undo lossless bf16->f32 upcast
+        if getattr(proto, "sharding", None) is not None:
+            leaves.append(jax.device_put(arr, proto.sharding))
+        else:
+            leaves.append(arr)
+    return jax.tree.unflatten(treedef, leaves)

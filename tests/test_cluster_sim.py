@@ -1,0 +1,161 @@
+"""Cluster simulation behaviour: the paper's experiment mechanics."""
+import pytest
+
+from repro.core import paper_testbed, PhaseWorkload, Phase, paper_phases
+from repro.core.cluster import Cluster, GPU_K600, VPU_NCS, tinyyolo_runtime
+from repro.core.workload import PhaseWorkload
+
+
+def run_paper(with_vpu, scheduler="warm", scale=0.05, seed=0, timeout=60.0):
+    cl = paper_testbed(with_vpu=with_vpu, scheduler=scheduler,
+                       invocation_timeout_s=timeout, seed=seed)
+    wl = PhaseWorkload(phases=paper_phases(10, 20, 20, scale=scale),
+                       runtime_id="onnx-tinyyolov2",
+                       data_ref="data:voc-images", seed=seed)
+    return cl.run_workloads([wl]), cl
+
+
+def test_all_events_complete_and_monotone():
+    m, cl = run_paper(with_vpu=True)
+    assert len(m.completed) == cl.queue.n_published
+    assert all(i.check_monotone() for i in m.completed)
+
+
+def test_elat_medians_match_paper_calibration():
+    m, _ = run_paper(with_vpu=True, scale=0.2)
+    gpu = m.median_elat("gpu")
+    vpu = m.median_elat("vpu")
+    assert abs(gpu - 1.675) < 0.05, gpu      # paper: 1675 ms
+    assert abs(vpu - 1.577) < 0.05, vpu      # paper: 1577 ms
+
+
+def test_vpu_increases_throughput():
+    """Paper claim C1: the extra accelerator raises max RFast with no user
+    intervention."""
+    m_gpu, _ = run_paper(with_vpu=False, scale=0.2)
+    m_all, _ = run_paper(with_vpu=True, scale=0.2)
+    assert m_all.rfast_max() > m_gpu.rfast_max()
+    assert m_all.r_success() > m_gpu.r_success()
+
+
+def test_vpu_raises_max_rlat_under_overload():
+    """Paper claim C3: heterogeneity raises the max RLat of successful
+    events (slow accelerator completes deep-backlog work near timeout)."""
+    m_gpu, _ = run_paper(with_vpu=False, scale=0.2, timeout=120.0)
+    m_all, _ = run_paper(with_vpu=True, scale=0.2, timeout=120.0)
+    rl_gpu = m_gpu.rlats()
+    rl_all = m_all.rlats()
+    assert rl_all[-1] >= rl_gpu[-1] * 0.95  # at least comparable-or-higher
+
+
+def test_warm_affinity_reduces_cold_starts():
+    cl_warm = Cluster(scheduler="warm", seed=0)
+    cl_fifo = Cluster(scheduler="fifo", seed=0)
+    for cl in (cl_warm, cl_fifo):
+        cl.add_node("n0", [GPU_K600])
+        cl.register_runtime(tinyyolo_runtime())
+        # two interleaved workload configs competing for one GPU
+        for m in ("m1", "m2"):
+            wl = PhaseWorkload(
+                phases=[Phase("p", 60, 0.4)], runtime_id="onnx-tinyyolov2",
+                data_ref="runtime:onnx-tinyyolov2", config={"model": m})
+            for inv in wl.events():
+                cl.submit(inv)
+        cl.run(until=600)
+    node_w = cl_warm.nodes[0]
+    node_f = cl_fifo.nodes[0]
+    assert node_w.n_cold_starts <= node_f.n_cold_starts
+    assert node_w.n_warm_starts >= node_f.n_warm_starts
+
+
+def test_scale_to_zero_evicts_idle_instances():
+    cl = Cluster(scheduler="warm", idle_timeout_s=10.0)
+    cl.add_node("n0", [GPU_K600])
+    cl.register_runtime(tinyyolo_runtime())
+    from repro.core.events import Invocation
+    cl.submit(Invocation(runtime_id="onnx-tinyyolov2", data_ref="x",
+                         r_start=0.0))
+    cl.run(until=500.0)
+    acc = cl.nodes[0].accelerators[0]
+    assert not acc.warm  # instance evicted after idle timeout
+
+
+def test_throughput_bounded_by_capacity():
+    """Offered load >> capacity: successful completions/sec ~= capacity."""
+    m, cl = run_paper(with_vpu=False, scale=0.2, timeout=1e9)
+    dur = 844 * 0.2 + 600  # workload + drain window (extra_time)
+    rate = m.r_success() / dur
+    capacity = 4 / 1.675
+    assert rate <= capacity * 1.1
+
+
+def test_cost_aware_prefers_cheap_accelerator():
+    cl = Cluster(scheduler="cost", seed=0)
+    cl.add_node("n0", [GPU_K600, VPU_NCS])
+    cl.register_runtime(tinyyolo_runtime())
+    from repro.core.events import Invocation
+    for i in range(4):
+        cl.submit(Invocation(runtime_id="onnx-tinyyolov2", data_ref="x",
+                             r_start=float(i * 30)))
+    cl.run(until=1000.0)
+    accs = [i.accelerator for i in cl.metrics.completed]
+    # VPU is 5x cheaper per hour -> cost policy must route there
+    assert all("vpu" in a for a in accs), accs
+
+
+def test_autoscaler_provisions_and_drains():
+    from repro.core.accelerator import AcceleratorSpec
+    from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+    from repro.core.runtime import RuntimeDef, SimProfile
+    from repro.core.workload import Phase, PhaseWorkload
+
+    slice_spec = AcceleratorSpec(type="v5e-4x4", slots=2)
+    cl = Cluster(scheduler="warm", seed=0)
+    cl.register_runtime(RuntimeDef(
+        runtime_id="rt", profiles={"v5e-4x4": SimProfile(
+            elat_median_s=0.8, cold_start_s=5.0)}))
+    cl.store.put(b"\0" * 128, key="d")
+    cl.add_node("auto-seed", [slice_spec])
+    scaler = Autoscaler(cl, slice_spec, AutoscalerConfig(
+        min_nodes=1, max_nodes=4, provision_delay_s=20.0,
+        check_interval_s=5.0, cooldown_checks=3))
+    scaler.start()
+    wl = PhaseWorkload(phases=[Phase("burst", 120, 5.0),
+                               Phase("calm", 400, 0.1)],
+                       runtime_id="rt", data_ref="d")
+    m = cl.run_workloads([wl], extra_time_s=900.0)
+    scaler.stop()
+    actions = [e[1] for e in scaler.events]
+    assert "node-ready" in actions          # scaled out under the burst
+    assert "drain" in actions               # scaled back in when calm
+    assert all(i.success for i in m.completed)
+    # draining nodes stop taking work
+    drained = [n for n in cl.nodes if n.draining]
+    assert drained
+    for n in drained:
+        assert all(a.busy_slots == 0 for a in n.accelerators)
+
+
+def test_autoscaler_respects_max_nodes():
+    from repro.core.accelerator import AcceleratorSpec
+    from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+    from repro.core.runtime import RuntimeDef, SimProfile
+    from repro.core.workload import Phase, PhaseWorkload
+
+    slice_spec = AcceleratorSpec(type="v5e-4x4", slots=1)
+    cl = Cluster(scheduler="warm", seed=0)
+    cl.register_runtime(RuntimeDef(
+        runtime_id="rt", profiles={"v5e-4x4": SimProfile(
+            elat_median_s=2.0, cold_start_s=2.0)}))
+    cl.store.put(b"\0" * 128, key="d")
+    cl.add_node("auto-seed", [slice_spec])
+    scaler = Autoscaler(cl, slice_spec, AutoscalerConfig(
+        min_nodes=1, max_nodes=2, provision_delay_s=10.0,
+        check_interval_s=5.0))
+    scaler.start()
+    wl = PhaseWorkload(phases=[Phase("flood", 200, 10.0)],
+                       runtime_id="rt", data_ref="d")
+    cl.run_workloads([wl], extra_time_s=0.0)
+    scaler.stop()
+    ready = [e for e in scaler.events if e[1] == "node-ready"]
+    assert len(ready) <= 2

@@ -1,0 +1,84 @@
+"""Property tests on the scannable queue + event invariants (hypothesis)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.events import Invocation
+from repro.core.queue import ScannableQueue
+
+RUNTIMES = ["rt-a", "rt-b", "rt-c"]
+
+
+def mk(rt, cfg=None, t=0.0):
+    return Invocation(runtime_id=rt, data_ref="d", config=cfg or {},
+                      r_start=t)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from(RUNTIMES), max_size=40), st.data())
+def test_no_lost_no_duplicated_events(runtimes, data):
+    q = ScannableQueue()
+    events = [mk(rt, t=float(i)) for i, rt in enumerate(runtimes)]
+    for e in events:
+        q.publish(e, e.r_start)
+    taken = []
+    while len(q):
+        supported = set(data.draw(st.sets(st.sampled_from(RUNTIMES),
+                                          min_size=1)))
+        got = q.take_any(supported)
+        if got is None:
+            # nothing matching: drain with full support to finish
+            got = q.take_any(set(RUNTIMES))
+            if got is None:
+                break
+        taken.append(got.inv_id)
+    assert sorted(taken) == sorted(e.inv_id for e in events)
+    assert len(set(taken)) == len(taken)
+
+
+def test_take_any_is_fifo_within_supported():
+    q = ScannableQueue()
+    e1, e2, e3 = mk("rt-a"), mk("rt-b"), mk("rt-a")
+    for e in (e1, e2, e3):
+        q.publish(e)
+    assert q.take_any({"rt-a"}).inv_id == e1.inv_id
+    assert q.take_any({"rt-a"}).inv_id == e3.inv_id
+    assert q.take_any({"rt-a"}) is None
+    assert q.take_any({"rt-b"}).inv_id == e2.inv_id
+
+
+def test_take_matching_uses_runtime_key():
+    q = ScannableQueue()
+    e1 = mk("rt-a", {"model": "x"})
+    e2 = mk("rt-a", {"model": "y"})
+    q.publish(e1)
+    q.publish(e2)
+    got = q.take_matching(e2.runtime_key)
+    assert got.inv_id == e2.inv_id
+    assert q.take_matching(e2.runtime_key) is None
+    assert len(q) == 1
+
+
+def test_scan_is_readonly_and_ordered():
+    q = ScannableQueue()
+    events = [mk("rt-a", t=float(i)) for i in range(5)]
+    for e in events:
+        q.publish(e)
+    seen = [e.inv_id for e in q.scan()]
+    assert seen == [e.inv_id for e in events]
+    assert len(q) == 5
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(RUNTIMES),
+                          st.sampled_from(["m1", "m2"])), max_size=30))
+def test_depth_timeline_conservation(pairs):
+    q = ScannableQueue()
+    for i, (rt, m) in enumerate(pairs):
+        q.publish(mk(rt, {"model": m}, t=float(i)), float(i))
+    n = len(pairs)
+    while q.take_any(set(RUNTIMES), 999.0) is not None:
+        pass
+    assert q.n_published == n
+    assert q.n_taken == n
+    assert len(q) == 0
+    if q.depth_timeline:
+        assert q.depth_timeline[-1][1] == 0

@@ -1,0 +1,67 @@
+"""Cache correctness: prefill + step-by-step decode must reproduce the
+full-sequence forward logits exactly (f32 reduced configs), including
+ring-buffer wrap-around for sliding-window and chunked attention."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+
+FAMS = ["granite-3-2b", "qwen2.5-14b", "llama4-scout-17b-a16e",
+        "grok-1-314b", "recurrentgemma-2b", "xlstm-350m", "whisper-tiny"]
+
+
+def roundtrip(cfg, S=10, n_dec=14, seed=0):
+    params = M.init_model_params(cfg, jax.random.PRNGKey(seed))
+    B, total = 2, S + n_dec
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, total), 0, cfg.vocab)
+    batch_full = {"tokens": toks}
+    if cfg.n_frames:
+        batch_full["frames"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.n_frames, cfg.d_model),
+            jnp.float32)
+    full_logits, _, _ = M.forward(cfg, params, batch_full, mode="train")
+    pre = {k: (v[:, :S] if k == "tokens" else v) for k, v in batch_full.items()}
+    lg, cache = M.prefill(cfg, params, pre, cache_len=total)
+    errs = [float(jnp.max(jnp.abs(lg[:, 0] - full_logits[:, S - 1])))]
+    for t in range(S, total):
+        lg, cache = M.decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                  jnp.full((B,), t, jnp.int32))
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full_logits[:, t]))))
+    scale = float(jnp.max(jnp.abs(full_logits)))
+    return max(errs), scale
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    err, scale = roundtrip(cfg)
+    assert err < 2e-4 * max(scale, 1.0), (err, scale)
+
+
+@pytest.mark.parametrize("window", [4, 8, 16])
+def test_window_ring_cache_wraps(window):
+    cfg = dataclasses.replace(get_config("recurrentgemma-2b").reduced(),
+                              window=window)
+    err, scale = roundtrip(cfg, S=6, n_dec=3 * window)
+    assert err < 2e-4 * max(scale, 1.0), (err, window)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_chunk_ring_cache_wraps(chunk):
+    cfg = dataclasses.replace(get_config("llama4-scout-17b-a16e").reduced(),
+                              chunk=chunk)
+    err, scale = roundtrip(cfg, S=6, n_dec=3 * chunk)
+    assert err < 2e-4 * max(scale, 1.0), (err, chunk)
+
+
+def test_prefill_cache_len_extension():
+    cfg = get_config("granite-3-2b").reduced()
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    _, cache = M.prefill(cfg, params, {"tokens": toks}, cache_len=32)
+    k = cache["blocks"]["p0"]["k"]
+    assert k.shape[2] == 32  # (periods, B, L, KV, hd)

@@ -1,0 +1,112 @@
+"""Distribution correctness tests that need >1 XLA device.
+
+The device count is process-global (and the main pytest process must keep
+1 device for the smoke tests), so these run in subprocesses with
+``--xla_force_host_platform_device_count`` set.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 420) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         env=env, capture_output=True, text=True,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_moe_a2a_matches_local_routing():
+    run_sub("""
+        import dataclasses, jax, jax.numpy as jnp
+        from jax.sharding import AxisType
+        from repro.configs import get_config
+        from repro.models import model as M, sharding as S
+        import repro.models.blocks as BL
+
+        cfg = dataclasses.replace(
+            get_config("llama4-scout-17b-a16e").reduced(),
+            n_experts=4, top_k=1)
+        params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                  cfg.vocab)
+        ref, _, _ = M.forward(cfg, params, {"tokens": toks}, mode="train")
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        BL.MOE_A2A_CAPACITY_FACTOR = 4.0   # no drops -> exact
+        with S.axis_rules(mesh, S.rules_for("train", moe_a2a=True)):
+            got, _, _ = jax.jit(lambda p, t: M.forward(
+                cfg, p, {"tokens": t}, mode="train"))(params, toks)
+        err = float(jnp.max(jnp.abs(ref - got)))
+        assert err < 1e-3, err
+        print("ok", err)
+    """)
+
+
+def test_megatron_moe_matches_local_routing():
+    run_sub("""
+        import dataclasses, jax, jax.numpy as jnp
+        from jax.sharding import AxisType
+        from repro.configs import get_config
+        from repro.models import model as M, sharding as S
+
+        cfg = get_config("grok-1-314b").reduced()   # 4 experts top-2
+        params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                  cfg.vocab)
+        ref, _, _ = M.forward(cfg, params, {"tokens": toks}, mode="train")
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        with S.axis_rules(mesh, S.rules_for("train")):
+            got, _, _ = jax.jit(lambda p, t: M.forward(
+                cfg, p, {"tokens": t}, mode="train"))(params, toks)
+        err = float(jnp.max(jnp.abs(ref - got)))
+        assert err < 1e-3, err
+        print("ok", err)
+    """)
+
+
+def test_sharded_train_step_matches_single_device():
+    run_sub("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import AxisType
+        from repro.configs import get_config
+        from repro.models import model as M, sharding as S
+
+        cfg = get_config("granite-3-2b").reduced()
+        params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0,
+                                  cfg.vocab)
+        lbl = jax.random.randint(jax.random.PRNGKey(2), (8, 16), 0,
+                                 cfg.vocab)
+        batch = {"tokens": toks, "labels": lbl}
+        ref = float(M.loss_fn(cfg, params, batch))
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        with S.axis_rules(mesh, S.rules_for("train")):
+            got = float(jax.jit(lambda p, b: M.loss_fn(cfg, p, b))(params,
+                                                                   batch))
+        assert abs(ref - got) < 1e-3, (ref, got)
+        print("ok", ref, got)
+    """)
+
+
+@pytest.mark.slow
+def test_dryrun_single_combo_subprocess():
+    """The dry-run entry point itself (512 placeholder devices)."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "granite-3-2b", "--shape", "decode_32k", "--mesh", "single"],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "1 ok, 0 skipped, 0 errors" in out.stdout

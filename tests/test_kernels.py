@@ -1,0 +1,177 @@
+"""Pallas kernel validation (interpret mode) against the pure-jnp oracles:
+shape/dtype sweeps + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.rglru_scan import rglru_scan
+
+rng = np.random.default_rng(0)
+
+
+def rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+# ----------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------
+FLASH_CASES = [
+    # B, Sq, H, KV, hd, causal, window, chunk, dtype
+    (1, 256, 4, 2, 64, True, 0, 0, jnp.float32),
+    (2, 300, 4, 4, 128, True, 0, 0, jnp.float32),
+    (1, 256, 8, 2, 64, True, 64, 0, jnp.float32),
+    (1, 512, 4, 1, 64, True, 0, 128, jnp.float32),
+    (2, 128, 6, 6, 64, False, 0, 0, jnp.float32),
+    (1, 256, 4, 2, 128, True, 0, 0, jnp.bfloat16),
+    (1, 130, 2, 2, 256, True, 0, 0, jnp.float32),   # ragged seq, wide head
+]
+
+
+@pytest.mark.parametrize("B,Sq,H,KV,hd,causal,window,chunk,dtype", FLASH_CASES)
+def test_flash_attention_vs_oracle(B, Sq, H, KV, hd, causal, window, chunk,
+                                   dtype):
+    q = rand((B, Sq, H, hd), dtype)
+    k = rand((B, Sq, KV, hd), dtype)
+    v = rand((B, Sq, KV, hd), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window, chunk=chunk,
+                          interpret=True, block_q=128, block_kv=128)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window,
+                               chunk=chunk)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_flash_vs_full_attention_oracle_agree():
+    q, k, v = (rand((1, 64, 4, 32)) for _ in range(3))
+    a = ref.flash_attention(q, k, v, causal=True)
+    b = ref.full_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# decode attention
+# ----------------------------------------------------------------------
+DECODE_CASES = [
+    (2, 512, 8, 2, 64, [100, 512], jnp.float32),
+    (1, 300, 4, 4, 128, [1], jnp.float32),
+    (3, 1024, 10, 1, 256, [7, 777, 1024], jnp.float32),
+    (2, 128, 40, 8, 128, [64, 128], jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,lens,dtype", DECODE_CASES)
+def test_decode_attention_vs_oracle(B, S, H, KV, hd, lens, dtype):
+    q = rand((B, 1, H, hd), dtype)
+    k = rand((B, S, KV, hd), dtype)
+    v = rand((B, S, KV, hd), dtype)
+    kv_len = jnp.asarray(lens, jnp.int32)
+    got = decode_attention(q, k, v, kv_len, interpret=True, block_kv=128)
+    want = ref.decode_attention(q, k, v, kv_len)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+# ----------------------------------------------------------------------
+# moe grouped matmul
+# ----------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 4), st.data())
+def test_moe_gmm_property(e_pow, seed, data):
+    E = e_pow
+    T = data.draw(st.integers(1, 64))
+    K = data.draw(st.sampled_from([32, 64, 128]))
+    N = data.draw(st.sampled_from([32, 128]))
+    # random composition of T into E groups
+    cuts = sorted(data.draw(st.lists(st.integers(0, T), min_size=E - 1,
+                                     max_size=E - 1)))
+    sizes = np.diff([0] + cuts + [T]).astype(np.int32)
+    x = rand((T, K))
+    w = rand((E, K, N), scale=0.1)
+    gs = jnp.asarray(sizes)
+    got = moe_gmm(x, w, gs, interpret=True, block_m=8, block_k=32,
+                  block_n=32)
+    want = jax.lax.ragged_dot(x, w, gs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_gmm_matches_ref_oracle():
+    x = rand((40, 64))
+    w = rand((4, 64, 32), scale=0.1)
+    gs = jnp.asarray([10, 0, 25, 5], jnp.int32)
+    got = moe_gmm(x, w, gs, interpret=True, block_m=8)
+    want = ref.moe_gmm(x, w, gs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+
+# ----------------------------------------------------------------------
+# RG-LRU scan
+# ----------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 80), st.sampled_from([32, 128, 200]),
+       st.booleans())
+def test_rglru_property(B, S, D, with_h0):
+    a = jnp.asarray(rng.uniform(0.2, 0.999, size=(B, S, D)), jnp.float32)
+    b = rand((B, S, D))
+    h0 = rand((B, D)) if with_h0 else None
+    got = rglru_scan(a, b, h0, interpret=True, block_s=16, block_d=64)
+    want = ref.rglru_scan(a, b, h0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_oracle_matches_sequential():
+    """The associative-scan oracle itself vs a plain python recurrence."""
+    B, S, D = 2, 33, 8
+    a = np.asarray(rng.uniform(0.3, 0.99, size=(B, S, D)), np.float32)
+    b = np.asarray(rng.normal(size=(B, S, D)), np.float32)
+    h = np.zeros((B, D), np.float32)
+    seq = []
+    for t in range(S):
+        h = a[:, t] * h + b[:, t]
+        seq.append(h.copy())
+    want = np.stack(seq, axis=1)
+    got = np.asarray(ref.rglru_scan(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# int8-quantized KV cache dequantization (§Perf C kernel support)
+# ----------------------------------------------------------------------
+def test_decode_attention_int8_cache():
+    B, S, H, KV, hd = 2, 256, 8, 2, 64
+    q = rand((B, 1, H, hd))
+    kf = rand((B, S, KV, hd))
+    vf = rand((B, S, KV, hd))
+    # symmetric per-(batch, kv-head) quantization
+    ks = np.abs(np.asarray(kf)).max(axis=(1, 3)) / 127.0
+    vs = np.abs(np.asarray(vf)).max(axis=(1, 3)) / 127.0
+    k8 = jnp.asarray(np.round(np.asarray(kf) /
+                              ks[:, None, :, None]), jnp.int8)
+    v8 = jnp.asarray(np.round(np.asarray(vf) /
+                              vs[:, None, :, None]), jnp.int8)
+    kv_len = jnp.asarray([100, 256], jnp.int32)
+
+    want_float = ref.decode_attention(q, kf, vf, kv_len)
+    got_ref = ref.decode_attention(q, k8, v8, kv_len,
+                                   k_scale=jnp.asarray(ks),
+                                   v_scale=jnp.asarray(vs))
+    got_kernel = decode_attention(q, k8, v8, kv_len,
+                                  k_scale=jnp.asarray(ks),
+                                  v_scale=jnp.asarray(vs),
+                                  interpret=True, block_kv=128)
+    # kernel matches the int8 oracle bit-for-bit-ish
+    np.testing.assert_allclose(np.asarray(got_kernel), np.asarray(got_ref),
+                               atol=2e-5)
+    # and both are within quantization error of the float result
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want_float),
+                               atol=0.05)

@@ -1,0 +1,95 @@
+"""Metrics derivations + roofline HLO collective parsing."""
+import numpy as np
+
+from repro.core.events import Invocation
+from repro.core.metrics import MetricsCollector
+from repro.roofline.analysis import RooflineReport
+from repro.roofline.hlo import collective_bytes, shape_bytes
+
+
+def done_inv(t0, dur, acc="gpu0(gpu-k600)"):
+    inv = Invocation(runtime_id="r", data_ref="d", r_start=t0)
+    inv.n_start = t0 + 0.01
+    inv.e_start = t0 + 0.02
+    inv.e_end = t0 + 0.02 + dur
+    inv.n_end = inv.e_end + 0.01
+    inv.r_end = inv.n_end + 0.01
+    inv.success = True
+    inv.accelerator = acc
+    return inv
+
+
+def test_rfast_window():
+    m = MetricsCollector()
+    # 20 completions, one per second starting t=1
+    for i in range(20):
+        m.record(done_inv(float(i), 1.0))
+    tl = dict(m.rfast_timeline(step=1.0))
+    # steady state: 10 completions in any 10 s window -> 1.0/s
+    assert abs(tl[15.0] - 1.0) < 0.15
+    assert m.rfast_max() <= 1.2
+
+
+def test_median_elat_filtering():
+    m = MetricsCollector()
+    m.record(done_inv(0, 1.0, "a0(gpu-k600)"))
+    m.record(done_inv(1, 3.0, "a1(vpu-ncs)"))
+    assert abs(m.median_elat("gpu") - 1.0) < 1e-9
+    assert abs(m.median_elat("vpu") - 3.0) < 1e-9
+
+
+def test_monotonicity_enforced():
+    m = MetricsCollector()
+    inv = done_inv(0, 1.0)
+    inv.r_end = inv.r_start - 5  # corrupt
+    try:
+        m.record(inv)
+        assert False, "should assert"
+    except AssertionError:
+        pass
+
+
+# ---------------------------------------------------------------- hlo parse
+def test_shape_bytes():
+    assert shape_bytes("bf16[16,4096,5120]{2,1,0}") == 16 * 4096 * 5120 * 2
+    assert shape_bytes("(f32[8]{0}, s32[2,2]{1,0})") == 32 + 16
+    assert shape_bytes("pred[10]{0}") == 10
+
+
+def test_collective_bytes_parses_ops():
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups=...
+  %ar.1 = f32[256]{0} all-reduce(%y), to_apply=%add
+  %rs = f32[4,4]{1,0} reduce-scatter(%z)
+  %a2a = (f32[8]{0}, f32[8]{0}) all-to-all(%p, %q)
+  %cp = bf16[2,2]{1,0} collective-permute(%w)
+  %agd = bf16[999]{0} all-gather-done(%ag2)
+  %other = f32[100]{0} add(%a, %b)
+"""
+    total, per_type, counts = collective_bytes(hlo)
+    assert per_type["all-gather"] == 16 * 1024 * 2
+    assert per_type["all-reduce"] == 256 * 4
+    assert per_type["reduce-scatter"] == 64
+    assert per_type["all-to-all"] == 64
+    assert per_type["collective-permute"] == 8
+    assert counts["all-gather"] == 1  # -done excluded
+    assert total == sum(per_type.values())
+
+
+def test_roofline_report_terms():
+    r = RooflineReport(
+        arch="x", shape="train_4k", mesh="single", chips=256,
+        hlo_flops=197e12 * 0.5,       # 0.5 s compute
+        hlo_bytes=819e9 * 2.0,        # 2 s memory (unfused)
+        coll_bytes=50e9 * 1.0,        # 1 s collective
+        coll_breakdown={}, coll_counts={},
+        model_flops=197e12 * 256 * 0.25,
+        model_bytes=819e9 * 0.1,      # fused model: 0.1 s
+    )
+    assert abs(r.t_compute - 0.5) < 1e-9
+    assert abs(r.t_memory - 0.1) < 1e-9
+    assert abs(r.t_memory_unfused - 2.0) < 1e-9
+    assert abs(r.t_collective - 1.0) < 1e-9
+    assert r.dominant == "collective"
+    assert abs(r.useful_ratio - 0.5) < 1e-9
+    assert abs(r.mfu - 0.25) < 1e-9

@@ -1,0 +1,60 @@
+"""End-to-end behaviour: the Hardless control plane executing REAL JAX
+model serving as runtime instances (cold start = jit + weights), plus
+metrics plumbing."""
+import jax
+
+from repro.configs import get_config
+from repro.core.cluster import Cluster
+from repro.core.accelerator import AcceleratorSpec
+from repro.core.events import Invocation
+from repro.core.runtime import SimProfile
+from repro.serve.api import make_serve_runtime
+
+
+def make_cluster():
+    cl = Cluster(scheduler="warm", seed=0)
+    cpu_slice = AcceleratorSpec(type="cpu-slice", slots=1,
+                                mem_bytes=4 << 30, cost_per_hour=0.2)
+    cl.add_node("pod0", [cpu_slice])
+    cfg = get_config("granite-3-2b").reduced()
+    rdef = make_serve_runtime(
+        cfg, acc_types={"cpu-slice": SimProfile(elat_median_s=0.5,
+                                                cold_start_s=1.0)},
+        max_slots=2, max_len=48)
+    cl.register_runtime(rdef)
+    return cl, rdef
+
+
+def test_serverless_serving_end_to_end():
+    cl, rdef = make_cluster()
+    data_ref = cl.store.put({"prompts": [[1, 5, 9], [1, 7, 2]]})
+    for i in range(3):
+        cl.submit(Invocation(runtime_id=rdef.runtime_id, data_ref=data_ref,
+                             config={"max_new_tokens": 4},
+                             r_start=float(i)))
+    cl.run(until=10_000.0)
+    m = cl.metrics
+    assert len(m.completed) == 3
+    assert all(i.success for i in m.completed), \
+        [(i.error) for i in m.completed]
+    assert all(i.check_monotone() for i in m.completed)
+    # results are persisted in object storage
+    for inv in m.completed:
+        res = cl.store.get(inv.result_ref)
+        assert len(res["outputs"]) == 2
+        assert all(len(o) <= 4 for o in res["outputs"])
+    # warm reuse: only the first event cold-starts
+    node = cl.nodes[0]
+    assert node.n_cold_starts == 1
+    assert node.n_warm_starts == 2
+
+
+def test_real_execution_elat_measured():
+    cl, rdef = make_cluster()
+    data_ref = cl.store.put({"prompts": [[1, 2, 3]]})
+    cl.submit(Invocation(runtime_id=rdef.runtime_id, data_ref=data_ref,
+                         config={"max_new_tokens": 2}, r_start=0.0))
+    cl.run(until=10_000.0)
+    inv = cl.metrics.completed[0]
+    assert inv.elat is not None and inv.elat > 0
+    assert inv.rlat >= inv.elat

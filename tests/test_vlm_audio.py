@@ -1,0 +1,62 @@
+"""Modality-frontend stubs: VLM patch prefix and audio frames behave per
+DESIGN (embeddings consumed by the backbone; loss/logits on token positions
+only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+
+
+def test_vlm_patch_prefix_changes_logits():
+    cfg = get_config("llava-next-34b").reduced()
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    p1 = jax.random.normal(jax.random.PRNGKey(2),
+                           (B, cfg.n_patches, cfg.d_model), jnp.float32)
+    p2 = p1 + 1.0
+    l1, _, _ = M.forward(cfg, params, {"tokens": toks, "patches": p1})
+    l2, _, _ = M.forward(cfg, params, {"tokens": toks, "patches": p2})
+    # logits are per-token only (patch positions stripped)...
+    assert l1.shape == (B, S, cfg.padded_vocab)
+    # ...but attend to the patch prefix
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-3
+
+
+def test_vlm_prefill_decode_with_patches():
+    cfg = get_config("llava-next-34b").reduced()
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    B, S, n_dec = 2, 8, 4
+    total = S + n_dec
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, total), 0,
+                              cfg.vocab)
+    patches = jax.random.normal(jax.random.PRNGKey(2),
+                                (B, cfg.n_patches, cfg.d_model), jnp.float32)
+    full, _, _ = M.forward(cfg, params, {"tokens": toks, "patches": patches},
+                           mode="train")
+    # prefill caches include the patch prefix; decode positions continue
+    # from n_patches + prompt length
+    lg, cache = M.prefill(cfg, params,
+                          {"tokens": toks[:, :S], "patches": patches},
+                          cache_len=cfg.n_patches + total)
+    errs = [float(jnp.max(jnp.abs(lg[:, 0] - full[:, S - 1])))]
+    for t in range(S, total):
+        pos = jnp.full((B,), cfg.n_patches + t, jnp.int32)
+        lg, cache = M.decode_step(cfg, params, cache, toks[:, t:t + 1], pos)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))))
+    scale = float(jnp.max(jnp.abs(full)))
+    assert max(errs) < 2e-4 * max(scale, 1.0), (max(errs), scale)
+
+
+def test_audio_frames_flow_through_cross_attention():
+    cfg = get_config("whisper-tiny").reduced()
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    f1 = jax.random.normal(jax.random.PRNGKey(2),
+                           (B, cfg.n_frames, cfg.d_model), jnp.float32)
+    l1, _, _ = M.forward(cfg, params, {"tokens": toks, "frames": f1})
+    l2, _, _ = M.forward(cfg, params, {"tokens": toks, "frames": f1 * 2})
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-3
