@@ -1,0 +1,81 @@
+"""Scheduler-policy comparison THROUGH the gateway: the same ``map()``
+client call replayed against the paper testbed under ``fifo`` / ``warm`` /
+``cost``, reporting ELat, RLat, throughput and cold starts per policy.
+
+Optionally (--real) appends a row for the real-execution engine backend —
+measured wall-time ELat of actual JAX serving on this host.
+
+    PYTHONPATH=src python benchmarks/bench_gateway.py [--real]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict
+
+from repro.core.cluster import paper_testbed
+from repro.gateway import EngineBackend, Gateway, SimBackend
+
+N_EVENTS = 120
+SPACING_S = 0.25        # 4 events/s offered — above single-GPU capacity
+
+
+def run_policy(policy: str, seed: int = 0) -> Dict[str, float]:
+    gw = Gateway(SimBackend(paper_testbed(
+        with_vpu=True, scheduler=policy, seed=seed)))
+    # two model variants interleaved -> warm-affinity pressure
+    for m in ("va", "vb"):
+        gw.map("onnx-tinyyolov2", [b"\0" * 1024] * (N_EVENTS // 2),
+               config={"model": m}, at=0.0, spacing_s=2 * SPACING_S)
+    gw.drain()
+    s = gw.summary()
+    node = gw.backend.cluster.nodes[0]
+    span = max(f.invocation.r_end or 0.0 for f in gw.futures)
+    return {
+        "elat_p50_s": round(s["elat_p50"], 3),
+        "rlat_p50_s": round(s["rlat_p50"], 3),
+        "rlat_p99_s": round(s["rlat_p99"], 3),
+        "r_success": s["r_success"],
+        "cold_starts": node.n_cold_starts,
+        "warm_starts": node.n_warm_starts,
+        "throughput_per_s": round(s["r_success"] / max(span, 1e-9), 3),
+    }
+
+
+def run_engine(n_events: int = 6) -> Dict[str, float]:
+    from repro.configs import get_config
+    from repro.serve.api import make_serve_runtime
+
+    gw = Gateway(EngineBackend())
+    rid = gw.register(make_serve_runtime(get_config("granite-3-2b").reduced(),
+                                         max_slots=2, max_len=48))
+    gw.map(rid, [{"prompts": [[1, 5, 9]]}] * n_events,
+           config={"max_new_tokens": 4})
+    gw.drain()
+    s = gw.summary()
+    eb = gw.backend
+    span = max(f.invocation.r_end or 0.0 for f in gw.futures)
+    return {
+        "elat_p50_s": round(s["elat_p50"], 3),
+        "rlat_p50_s": round(s["rlat_p50"], 3),
+        "rlat_p99_s": round(s["rlat_p99"], 3),
+        "r_success": s["r_success"],
+        "cold_starts": eb.n_cold_starts,
+        "warm_starts": eb.n_warm_starts,
+        "throughput_per_s": round(s["r_success"] / max(span, 1e-9), 3),
+    }
+
+
+def bench(real: bool = False) -> Dict[str, Dict[str, float]]:
+    out = {f"sim/{p}": run_policy(p) for p in ("fifo", "warm", "cost")}
+    if real:
+        out["engine/real"] = run_engine()
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--real", action="store_true",
+                    help="also run the real-execution engine backend row")
+    args = ap.parse_args()
+    print(json.dumps(bench(real=args.real), indent=2))

@@ -71,6 +71,16 @@ def main() -> None:
              f"p50={r['rlat_p50']:.2f}s p99={r['rlat_p99']:.2f}s "
              f"node_s={r['node_seconds']:.0f}")
 
+    # --- beyond paper: gateway policy comparison --------------------------
+    from benchmarks.bench_gateway import bench as gw_bench
+    t0 = time.perf_counter()
+    g = gw_bench()
+    us = (time.perf_counter() - t0) * 1e6 / 3
+    for name, r in g.items():
+        _row(f"gateway_{name.replace('/', '_')}", us,
+             f"elat_p50={r['elat_p50_s']:.2f}s rlat_p50={r['rlat_p50_s']:.2f}s "
+             f"cold={r['cold_starts']} tput={r['throughput_per_s']:.2f}/s")
+
     # --- serving engine (real JAX execution) ------------------------------
     from benchmarks.bench_serving import bench as serving_bench
     t0 = time.perf_counter()

@@ -49,6 +49,7 @@ class Cluster:
         self._idle_timeout = idle_timeout_s
         self._max_warm = max_warm
         self._seed = seed
+        self._horizon = 0.0          # latest submitted r_start (drain bound)
 
     # -- topology -------------------------------------------------------
     def add_node(self, name: str, specs: Sequence[AcceleratorSpec]
@@ -74,6 +75,7 @@ class Cluster:
     # -- client API (the serverless front door) --------------------------
     def submit(self, inv: Invocation) -> None:
         inv.r_start = self.clock.now() if inv.r_start is None else inv.r_start
+        self._horizon = max(self._horizon, inv.r_start)
         self.clock.call_at(inv.r_start,
                            lambda: self.queue.publish(inv, inv.r_start))
 
@@ -89,6 +91,12 @@ class Cluster:
 
     def run(self, until: Optional[float] = None) -> None:
         self.clock.run(until=until)
+
+    def drain(self, extra_time_s: float = 600.0) -> None:
+        """Advance the clock far enough past the last submitted event for
+        everything to finish (the gateway's blocking-wait primitive — bounded,
+        so periodic timers such as the autoscaler tick cannot spin forever)."""
+        self.clock.run(until=self._horizon + extra_time_s)
 
 
 # ----------------------------------------------------------------------

@@ -132,13 +132,17 @@ class NodeManager:
         inv.e_end = now
         rdef = self.registry.get(inv.runtime_id)
         prof = rdef.profiles[acc.spec.type]
-        if result is not None:
-            inv.result_ref = self.store.put(result)
         upload = self.store.transfer_time_bytes(prof.result_bytes)
         inv.n_end = now + upload
         inv.r_end = inv.n_end + CLIENT_NOTIFY_S
+        if err is None and self._expired_at(inv.r_end, inv):
+            err = "timeout-at-completion"
         inv.error = err
-        inv.success = err is None and not self._expired_at(inv.r_end, inv)
+        inv.success = err is None
+        # persist the outcome in object storage (§IV-A: results land in the
+        # store; gateway futures poll this key for completion) — the failure
+        # record, not the payload, when the event did not succeed
+        self.store.persist_outcome(inv, result if err is None else None, err)
         acc.mark_warm(inv.runtime_key, now, self.max_warm)
         acc.total_busy_time += inv.e_end - (inv.e_start or now)
         acc.n_executions += 1
@@ -169,6 +173,7 @@ class NodeManager:
         inv.r_end = now
         inv.success = False
         inv.error = reason
+        self.store.persist_outcome(inv, None, reason)   # for store pollers
         self.metrics.record(inv)
 
     def _maybe_scale_to_zero(self, acc: Accelerator, runtime_key: str) -> None:

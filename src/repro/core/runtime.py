@@ -22,6 +22,11 @@ import random
 from typing import Any, Callable, Dict, Optional
 
 
+# accelerator type advertised for runtimes executing directly on this
+# host's JAX devices (the gateway's engine backend)
+HOST_ACC = "host-jax"
+
+
 @dataclasses.dataclass(frozen=True)
 class SimProfile:
     """Lognormal service-time model with median ``elat_median_s``."""
@@ -48,6 +53,12 @@ class RuntimeDef:
     def supports(self, acc_type: str) -> bool:
         return acc_type in self.profiles
 
+    @property
+    def is_real(self) -> bool:
+        """True when invocations execute actual code on this host (the
+        gateway's engine backend requires this; the sim backend ignores it)."""
+        return self.fn is not None
+
 
 class RuntimeRegistry:
     """The object-store-backed runtime catalogue."""
@@ -57,6 +68,9 @@ class RuntimeRegistry:
 
     def register(self, rdef: RuntimeDef) -> None:
         self._defs[rdef.runtime_id] = rdef
+
+    def ids(self):
+        return list(self._defs)
 
     def get(self, runtime_id: str) -> RuntimeDef:
         return self._defs[runtime_id]

@@ -46,6 +46,17 @@ class ObjectStore:
     def size(self, key: str) -> int:
         return len(self._blobs[key])
 
+    # -- outcome records -------------------------------------------------
+    def persist_outcome(self, inv, result: Any,
+                        err: Optional[str]) -> str:
+        """Persist an invocation's outcome under the key gateway futures
+        poll (``result:inv<id>``); returns the ref. Shared by the node
+        manager and the engine backend so both write the same record."""
+        record = result if result is not None else \
+            {"inv_id": inv.inv_id, "success": err is None, "error": err}
+        inv.result_ref = self.put(record, key=f"result:inv{inv.inv_id}")
+        return inv.result_ref
+
     # -- latency model ---------------------------------------------------
     def transfer_time(self, key: str) -> float:
         """Seconds to move the blob over the storage network."""

@@ -1,0 +1,69 @@
+"""Asynchronous invocation futures.
+
+Hardless events are async-only (§IV-B): the client gets a handle at submit
+time and the result lands in object storage.  ``InvocationFuture`` is that
+handle — ``poll()`` is the non-blocking object-store check, ``result()``
+the blocking wait (which drives the backend until the event settles).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.core.events import Invocation
+
+
+class InvocationError(RuntimeError):
+    """The invocation completed unsuccessfully (execution error/timeout)."""
+
+    def __init__(self, inv: Invocation):
+        super().__init__(f"invocation {inv.inv_id} "
+                         f"({inv.runtime_id}) failed: {inv.error}")
+        self.invocation = inv
+
+
+class InvocationFuture:
+    def __init__(self, inv: Invocation, backend):
+        self.invocation = inv
+        self._backend = backend
+
+    # -- inspection ----------------------------------------------------
+    @property
+    def inv_id(self) -> int:
+        return self.invocation.inv_id
+
+    def done(self) -> bool:
+        return self.invocation.r_end is not None
+
+    def poll(self) -> bool:
+        """Non-blocking completion check against the object store — the
+        serverless client's "is my result there yet?" probe."""
+        ref = self.invocation.result_ref
+        return (ref is not None and ref in self._backend.store) or self.done()
+
+    @property
+    def elat(self) -> Optional[float]:
+        return self.invocation.elat
+
+    @property
+    def rlat(self) -> Optional[float]:
+        return self.invocation.rlat
+
+    # -- blocking wait -------------------------------------------------
+    def result(self, *, extra_time_s: float = 600.0) -> Any:
+        """Block until the invocation settles; return the stored result.
+
+        Raises :class:`InvocationError` on execution failure or timeout,
+        ``TimeoutError`` if the backend drains without the event settling.
+        """
+        if not self.done():
+            self._backend.drain(extra_time_s=extra_time_s)
+        if not self.done():
+            raise TimeoutError(
+                f"invocation {self.inv_id} did not settle within drain "
+                f"window (+{extra_time_s}s)")
+        inv = self.invocation
+        if not inv.success:
+            raise InvocationError(inv)
+        if inv.result_ref is not None and inv.result_ref in self._backend.store:
+            return self._backend.store.get(inv.result_ref)
+        return None

@@ -1,0 +1,111 @@
+"""The unified invocation gateway — one serverless front door.
+
+The paper's programming model (§IV-B: an event is *(runtime reference,
+data-set reference, run configuration)*, asynchronous only, no placement
+control) exposed as a client API over pluggable backends:
+
+    gw = Gateway(SimBackend(cluster))          # or EngineBackend()
+    gw.register(runtime_def)
+    fut = gw.invoke("onnx-tinyyolov2", payload, config={"model": "v1"})
+    futs = gw.map("onnx-tinyyolov2", payloads)
+    out = fut.result()                         # blocks; raises on failure
+
+Identical client code runs against the calibrated simulation and against
+real JAX execution — the backend decides what an invocation *costs*, the
+gateway only decides what it *means*.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.events import Invocation
+from repro.core.runtime import RuntimeDef
+from repro.gateway.backends import Backend
+from repro.gateway.future import InvocationFuture
+
+
+class Gateway:
+    def __init__(self, backend: Backend):
+        self.backend = backend
+        self.futures: List[InvocationFuture] = []
+
+    # -- catalogue ------------------------------------------------------
+    def register(self, rdef: RuntimeDef) -> str:
+        self.backend.register(rdef)
+        return rdef.runtime_id
+
+    def runtimes(self) -> List[str]:
+        return self.backend.registry.ids()
+
+    # -- data plane -----------------------------------------------------
+    def put(self, obj: Any, key: Optional[str] = None) -> str:
+        """Stage an input data set in object storage; returns its ref."""
+        return self.backend.store.put(obj, key=key)
+
+    # -- invocation -----------------------------------------------------
+    def invoke(self, runtime_id: str, payload: Any = None, *,
+               data_ref: Optional[str] = None,
+               config: Optional[Dict[str, Any]] = None,
+               at: Optional[float] = None) -> InvocationFuture:
+        """Submit one event; returns immediately with a future.
+
+        ``payload`` is staged to the object store (the stateless-workload
+        rule: runtimes fetch their data set, they never receive it inline);
+        pass ``data_ref`` instead to reuse an already-staged object.  ``at``
+        pins the event's RStart on the backend clock (default "now"): the
+        sim backend replays arrivals at exactly those times; the engine
+        backend executes at drain time in RStart order, so ``at`` controls
+        ordering and the recorded timestamps, not wall-clock delay.
+        """
+        if payload is not None and data_ref is not None:
+            raise ValueError("pass either payload or data_ref, not both")
+        if runtime_id not in self.backend.registry:
+            raise KeyError(f"unknown runtime {runtime_id!r}; register() it "
+                           f"first (known: {self.runtimes()})")
+        if data_ref is None:
+            data_ref = self.put(payload) if payload is not None else ""
+        inv = Invocation(runtime_id=runtime_id, data_ref=data_ref,
+                         config=dict(config or {}), r_start=at)
+        self.backend.submit(inv)
+        fut = InvocationFuture(inv, self.backend)
+        self.futures.append(fut)
+        return fut
+
+    def map(self, runtime_id: str, payloads: Sequence[Any], *,
+            config: Optional[Dict[str, Any]] = None,
+            at: Optional[float] = None,
+            spacing_s: float = 0.0) -> List[InvocationFuture]:
+        """Fan one runtime out over many payloads (Lithops-style ``map``).
+
+        ``spacing_s`` staggers RStart between consecutive events — an
+        open-loop arrival process without building a PhaseWorkload
+        (anchored at the backend's current time when ``at`` is omitted).
+        """
+        if at is None and spacing_s:
+            at = self.backend.now()
+        futs = []
+        for i, payload in enumerate(payloads):
+            t = None if at is None else at + i * spacing_s
+            futs.append(self.invoke(runtime_id, payload, config=config,
+                                    at=t))
+        return futs
+
+    # -- completion -----------------------------------------------------
+    def drain(self, extra_time_s: float = 600.0) -> None:
+        """Drive the backend until all submitted invocations settle."""
+        self.backend.drain(extra_time_s=extra_time_s)
+
+    def gather(self, futures: Optional[Sequence[InvocationFuture]] = None,
+               *, extra_time_s: float = 600.0) -> List[Any]:
+        """Drain once, then collect every result (raises on first failure)."""
+        self.drain(extra_time_s=extra_time_s)
+        return [f.result() for f in (futures if futures is not None
+                                     else self.futures)]
+
+    # -- observability --------------------------------------------------
+    @property
+    def metrics(self):
+        return self.backend.metrics
+
+    def summary(self) -> Dict[str, float]:
+        return self.backend.metrics.summary()

@@ -6,7 +6,20 @@ jax device state (the dry-run sets XLA_FLAGS before any jax import).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                    # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:                     # older jax: axes are Auto by default
+    AxisType = None
+
+
+def make_mesh(shape, axes):
+    """Version-tolerant mesh construction (explicit Auto axes where the
+    installed jax supports axis_types; plain mesh otherwise)."""
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,14 +27,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: 2 pods x 256 chips with a leading "pod" axis (DCN)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """1-device mesh for smoke tests / real CPU execution."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def mesh_chips(mesh) -> int:

@@ -1,9 +1,11 @@
-"""Serving launcher: a Hardless cluster of pods serving one or more
-architectures, driven by a phase workload of generation events.
+"""Serving launcher: generation workloads submitted through the unified
+invocation gateway.
 
-Real-execution mode runs reduced configs on this host; with --sim the
-service times come from the roofline-calibrated profiles instead (full-size
-configs, no hardware needed).
+``--backend sim`` (default) drives a Hardless cluster of pods on the
+discrete-event clock — real reduced-config execution inside the sim, or
+roofline-calibrated service times with ``--sim`` (full-size configs, no
+hardware needed).  ``--backend engine`` bypasses the cluster and executes
+on this host's JAX devices directly (the gateway's engine backend).
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
         --pods 2 --events 6
@@ -12,14 +14,12 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-
 from repro.configs import get_config
 from repro.core.accelerator import AcceleratorSpec
 from repro.core.cluster import Cluster
-from repro.core.events import Invocation
 from repro.core.runtime import RuntimeDef, SimProfile
 from repro.data.tokenizer import ByteTokenizer
+from repro.gateway import EngineBackend, Gateway, SimBackend
 from repro.serve.api import make_serve_runtime
 from repro.serve.service_model import roofline_profile
 
@@ -28,64 +28,86 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b",
                     help="comma-separated arch ids")
-    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--pods", type=int, default=None,
+                    help="sim backend only (default 2)")
     ap.add_argument("--events", type=int, default=6)
     ap.add_argument("--max-new-tokens", type=int, default=6)
-    ap.add_argument("--scheduler", default="warm",
-                    choices=["warm", "fifo", "cost"])
+    ap.add_argument("--scheduler", default=None,
+                    choices=["warm", "fifo", "cost"],
+                    help="sim backend only (default warm)")
+    ap.add_argument("--backend", default="sim", choices=["sim", "engine"],
+                    help="sim = pod cluster on the event clock; "
+                         "engine = direct execution on this host")
     ap.add_argument("--sim", action="store_true",
                     help="simulate full-size configs with roofline-derived "
-                         "service times instead of real reduced execution")
+                         "service times instead of real reduced execution "
+                         "(sim backend only)")
     args = ap.parse_args(argv)
+    if args.backend == "engine":
+        if args.sim:
+            ap.error("--sim requires --backend sim (the engine backend "
+                     "executes real code)")
+        if args.pods is not None or args.scheduler is not None:
+            ap.error("--pods/--scheduler only apply to --backend sim "
+                     "(the engine backend is single-host FIFO)")
+    pods = args.pods if args.pods is not None else 2
+    scheduler = args.scheduler if args.scheduler is not None else "warm"
 
-    slice_spec = AcceleratorSpec(type="v5e-4x4", slots=1,
-                                 mem_bytes=16 << 30, cost_per_hour=19.2,
-                                 chips=16)
-    cluster = Cluster(scheduler=args.scheduler, seed=0)
-    for p in range(args.pods):
-        cluster.add_node(f"pod{p}", [slice_spec])
+    acc_type = "v5e-4x4" if args.backend == "sim" else "host-jax"
+    if args.backend == "sim":
+        slice_spec = AcceleratorSpec(type=acc_type, slots=1,
+                                     mem_bytes=16 << 30, cost_per_hour=19.2,
+                                     chips=16)
+        cluster = Cluster(scheduler=scheduler, seed=0)
+        for p in range(pods):
+            cluster.add_node(f"pod{p}", [slice_spec])
+        gw = Gateway(SimBackend(cluster))
+    else:
+        gw = Gateway(EngineBackend())
 
     tok = ByteTokenizer()
     prompts = [tok.encode(t) for t in
                ["the quick brown fox jumps", "hardware accelerators",
                 "serverless computing is"]]
-    data_ref = cluster.store.put({"prompts": prompts})
+    data_ref = gw.put({"prompts": prompts})
 
-    archs = args.arch.split(",")
     rt_ids = []
-    for arch in archs:
+    for arch in args.arch.split(","):
         if args.sim:
             cfg = get_config(arch)
             prof = roofline_profile(cfg, batch=len(prompts),
                                     new_tokens=args.max_new_tokens)
             rdef = RuntimeDef(runtime_id=f"serve-{cfg.name}",
-                              profiles={"v5e-4x4": prof})
+                              profiles={acc_type: prof})
         else:
             cfg = get_config(arch).reduced()
-            rdef = make_serve_runtime(
-                cfg, acc_types={"v5e-4x4": SimProfile(elat_median_s=0.4,
-                                                      cold_start_s=2.0)},
-                max_slots=4, max_len=64)
-        cluster.register_runtime(rdef)
-        rt_ids.append(rdef.runtime_id)
+            # engine backend: make_serve_runtime's host-jax default profile
+            acc_types = None if args.backend == "engine" else \
+                {acc_type: SimProfile(elat_median_s=0.4, cold_start_s=2.0)}
+            rdef = make_serve_runtime(cfg, acc_types=acc_types,
+                                      max_slots=4, max_len=64)
+        rt_ids.append(gw.register(rdef))
 
     for i in range(args.events):
-        cluster.submit(Invocation(
-            runtime_id=rt_ids[i % len(rt_ids)], data_ref=data_ref,
-            config={"max_new_tokens": args.max_new_tokens},
-            r_start=0.5 * i))
-    cluster.run(until=1e9)
+        gw.invoke(rt_ids[i % len(rt_ids)], data_ref=data_ref,
+                  config={"max_new_tokens": args.max_new_tokens},
+                  at=0.5 * i)
+    gw.drain()
 
-    m = cluster.metrics
+    m = gw.metrics
     ok = sum(i.success for i in m.completed)
-    print(f"{ok}/{len(m.completed)} events succeeded")
+    print(f"[{gw.backend.name}] {ok}/{len(m.completed)} events succeeded")
     for inv in m.completed:
         print(f"  ev{inv.inv_id} rt={inv.runtime_id:28s} "
               f"acc={inv.accelerator} cold={int(inv.cold_start)} "
               f"ELat={inv.elat:.3f}s RLat={inv.rlat:.3f}s")
-    for node in cluster.nodes:
-        print(f"{node.name}: cold={node.n_cold_starts} "
-              f"warm={node.n_warm_starts}")
+    if args.backend == "sim":
+        for node in gw.backend.cluster.nodes:
+            print(f"{node.name}: cold={node.n_cold_starts} "
+                  f"warm={node.n_warm_starts}")
+    else:
+        print(f"local: cold={gw.backend.n_cold_starts} "
+              f"warm={gw.backend.n_warm_starts}")
     return 0 if ok == len(m.completed) else 1
 
 

@@ -43,7 +43,7 @@ def init_params(specs, key: jax.Array, dtype: str):
     Every leaf gets an independent key derived from its path, so adding or
     removing parameters never reshuffles the others.
     """
-    flat, treedef = jax.tree.flatten_with_path(specs, is_leaf=_is_spec)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(specs, is_leaf=_is_spec)
     leaves = []
     for path, spec in flat:
         path_str = "/".join(str(p) for p in path)

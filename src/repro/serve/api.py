@@ -12,19 +12,23 @@ from typing import Any, Dict, List, Optional
 import jax
 
 from repro.configs.base import ModelConfig
-from repro.core.runtime import RuntimeDef, SimProfile
+from repro.core.runtime import HOST_ACC, RuntimeDef, SimProfile
 from repro.models import model as M
 from repro.serve.engine import Request, ServingEngine
 
 
-def make_serve_runtime(cfg: ModelConfig, *, acc_types: Dict[str, SimProfile],
+def make_serve_runtime(cfg: ModelConfig, *,
+                       acc_types: Optional[Dict[str, SimProfile]] = None,
                        max_slots: int = 4, max_len: int = 128,
                        seed: int = 0) -> RuntimeDef:
     """RuntimeDef for serving ``cfg`` with REAL execution on this host.
 
     acc_types: accelerator type -> SimProfile (used for cold-start/result
     modeling; ELat itself is measured wall time of the actual forward).
+    Defaults to the gateway engine backend's ``host-jax`` type.
     """
+    if acc_types is None:
+        acc_types = {HOST_ACC: SimProfile(elat_median_s=0.4, cold_start_s=2.0)}
 
     def setup():
         params = M.init_model_params(cfg, jax.random.PRNGKey(seed))

@@ -41,8 +41,8 @@ def _slot_batch_axis(path) -> int:
 
 def write_slot(cache, slot_cache, idx: int):
     """Insert a B=1 cache into slot ``idx`` of the engine cache."""
-    flat_c, treedef = jax.tree.flatten_with_path(cache)
-    flat_s = [l for _, l in jax.tree.flatten_with_path(slot_cache)[0]]
+    flat_c, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    flat_s = [l for _, l in jax.tree_util.tree_flatten_with_path(slot_cache)[0]]
     out = []
     for (path, big), small in zip(flat_c, flat_s):
         ax = _slot_batch_axis(path)
@@ -124,6 +124,15 @@ class ServingEngine:
                 finished.append(req)
                 self.active[i] = None
         return finished
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        """Instance-lifetime counters (surfaced by the gateway's engine
+        backend next to the per-invocation timestamps)."""
+        return {"n_prefills": self.n_prefills,
+                "n_decode_steps": self.n_decode_steps,
+                "active_slots": sum(r is not None for r in self.active),
+                "max_slots": self.max_slots}
 
     # ------------------------------------------------------------------
     def generate(self, requests: List[Request]) -> List[Request]:

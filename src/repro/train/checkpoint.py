@@ -23,12 +23,12 @@ def _leaf_key(tag: str, step: int, path: str) -> str:
 
 
 def _paths(tree) -> list:
-    flat, _ = jax.tree.flatten_with_path(tree)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     return ["/".join(str(p) for p in path) for path, _ in flat]
 
 
 def save(store: ObjectStore, tag: str, step: int, tree: Any) -> str:
-    flat, _ = jax.tree.flatten_with_path(tree)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     manifest = {"step": step, "leaves": [], "dtypes": {}}
     for path, leaf in flat:
         pstr = "/".join(str(p) for p in path)
@@ -56,7 +56,7 @@ def latest_step(store: ObjectStore, tag: str) -> Optional[int]:
 def restore(store: ObjectStore, tag: str, step: int, like: Any) -> Any:
     """Restore into the structure (dtype, shardings via device_put) of
     ``like`` — a pytree of arrays or ShapeDtypeStructs."""
-    flat, treedef = jax.tree.flatten_with_path(like)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for path, proto in flat:
         pstr = "/".join(str(p) for p in path)

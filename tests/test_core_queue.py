@@ -1,4 +1,7 @@
 """Property tests on the scannable queue + event invariants (hypothesis)."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.events import Invocation

@@ -28,7 +28,7 @@ def run_sub(code: str, devices: int = 8, timeout: int = 420) -> str:
 def test_moe_a2a_matches_local_routing():
     run_sub("""
         import dataclasses, jax, jax.numpy as jnp
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh
         from repro.configs import get_config
         from repro.models import model as M, sharding as S
         import repro.models.blocks as BL
@@ -40,8 +40,7 @@ def test_moe_a2a_matches_local_routing():
         toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
                                   cfg.vocab)
         ref, _, _ = M.forward(cfg, params, {"tokens": toks}, mode="train")
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         BL.MOE_A2A_CAPACITY_FACTOR = 4.0   # no drops -> exact
         with S.axis_rules(mesh, S.rules_for("train", moe_a2a=True)):
             got, _, _ = jax.jit(lambda p, t: M.forward(
@@ -55,7 +54,7 @@ def test_moe_a2a_matches_local_routing():
 def test_megatron_moe_matches_local_routing():
     run_sub("""
         import dataclasses, jax, jax.numpy as jnp
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh
         from repro.configs import get_config
         from repro.models import model as M, sharding as S
 
@@ -64,8 +63,7 @@ def test_megatron_moe_matches_local_routing():
         toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
                                   cfg.vocab)
         ref, _, _ = M.forward(cfg, params, {"tokens": toks}, mode="train")
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         with S.axis_rules(mesh, S.rules_for("train")):
             got, _, _ = jax.jit(lambda p, t: M.forward(
                 cfg, p, {"tokens": t}, mode="train"))(params, toks)
@@ -78,7 +76,7 @@ def test_megatron_moe_matches_local_routing():
 def test_sharded_train_step_matches_single_device():
     run_sub("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh
         from repro.configs import get_config
         from repro.models import model as M, sharding as S
 
@@ -90,8 +88,7 @@ def test_sharded_train_step_matches_single_device():
                                  cfg.vocab)
         batch = {"tokens": toks, "labels": lbl}
         ref = float(M.loss_fn(cfg, params, batch))
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         with S.axis_rules(mesh, S.rules_for("train")):
             got = float(jax.jit(lambda p, b: M.loss_fn(cfg, p, b))(params,
                                                                    batch))

@@ -1,0 +1,241 @@
+"""Unified invocation gateway: API surface, backend parity, and the seams
+between the gateway and the cluster / engine substrates."""
+import pytest
+
+from repro.core.accelerator import AcceleratorSpec
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+from repro.core.cluster import Cluster, paper_testbed
+from repro.core.runtime import RuntimeDef, SimProfile
+from repro.core.workload import PhaseWorkload, paper_phases
+from repro.gateway import (EngineBackend, Gateway, InvocationError,
+                           SimBackend)
+
+
+def toy_real_runtime(rid="toy", fail=False):
+    def setup():
+        return {"calls": 0}
+
+    def fn(data, config):
+        if fail:
+            raise RuntimeError("boom")
+        handle = config["handle"]
+        handle["calls"] += 1
+        return {"echo": data, "calls": handle["calls"]}
+
+    return RuntimeDef(runtime_id=rid,
+                      profiles={"host-jax": SimProfile(elat_median_s=0.01)},
+                      fn=fn, setup=setup)
+
+
+# ---------------------------------------------------------------- sim
+def test_sim_invoke_metrics_parity_with_run_workloads():
+    """The gateway over the sim backend is a pure re-fronting: replaying a
+    phase workload through invoke() yields the exact metrics run_workloads
+    produces directly."""
+    wl = PhaseWorkload(phases=paper_phases(10, 20, 20, scale=0.05),
+                       runtime_id="onnx-tinyyolov2",
+                       data_ref="data:voc-images", seed=0)
+
+    direct = paper_testbed(with_vpu=True, seed=0)
+    m_direct = direct.run_workloads([wl])
+
+    gw = Gateway(SimBackend(paper_testbed(with_vpu=True, seed=0)))
+    for t in wl.arrivals():
+        gw.invoke("onnx-tinyyolov2", data_ref="data:voc-images", at=t)
+    gw.drain()
+    m_gw = gw.metrics
+
+    assert len(m_gw.completed) == len(m_direct.completed)
+    assert m_gw.r_success() == m_direct.r_success()
+    assert m_gw.elats() == pytest.approx(m_direct.elats())
+    assert m_gw.rlats() == pytest.approx(m_direct.rlats())
+    s_gw, s_direct = m_gw.summary(), m_direct.summary()
+    assert s_gw["cold_starts"] == s_direct["cold_starts"]
+
+
+def test_sim_future_roundtrip_and_store_polling():
+    gw = Gateway(SimBackend(paper_testbed(with_vpu=False)))
+    fut = gw.invoke("onnx-tinyyolov2", b"an-image", at=0.0)
+    assert not fut.done() and not fut.poll()
+    out = fut.result()
+    assert fut.done() and fut.poll()
+    # sim completion record lands in the object store under the result ref
+    assert out["success"] is True
+    assert fut.invocation.result_ref in gw.backend.store
+    assert fut.elat is not None and fut.rlat >= fut.elat
+
+
+def test_map_fans_out_and_gather_collects():
+    gw = Gateway(SimBackend(paper_testbed(with_vpu=True)))
+    futs = gw.map("onnx-tinyyolov2", [b"a", b"b", b"c", b"d"],
+                  at=0.0, spacing_s=0.5)
+    assert len(futs) == 4
+    assert [f.invocation.r_start for f in futs] == [0.0, 0.5, 1.0, 1.5]
+    results = gw.gather(futs)
+    assert len(results) == 4
+    assert all(f.invocation.success for f in futs)
+
+
+def test_unknown_runtime_rejected_at_the_gateway():
+    gw = Gateway(SimBackend(paper_testbed(with_vpu=False)))
+    with pytest.raises(KeyError):
+        gw.invoke("no-such-runtime", b"x")
+
+
+def test_autoscaler_scales_out_and_in_under_gateway_load():
+    """Queue pressure created purely through gateway.map() drives the
+    platform half of elasticity: nodes provision on the burst and drain
+    back after it."""
+    slice_spec = AcceleratorSpec(type="v5e-4x4", slots=1,
+                                 mem_bytes=16 << 30, cost_per_hour=19.2)
+    cl = Cluster(scheduler="warm", seed=0)
+    cl.add_node("auto-seed", [slice_spec])
+    gw = Gateway(SimBackend(cl))
+    gw.register(RuntimeDef(
+        runtime_id="serve-sim",
+        profiles={"v5e-4x4": SimProfile(elat_median_s=0.8, sigma=0.1,
+                                        cold_start_s=8.0)}))
+    scaler = Autoscaler(cl, slice_spec, AutoscalerConfig(
+        min_nodes=1, max_nodes=6, provision_delay_s=30.0,
+        check_interval_s=5.0, cooldown_checks=3), node_prefix="auto")
+    scaler.start()
+
+    # 10-minute burst at 5 events/s against ~1.25/s single-node capacity
+    gw.map("serve-sim", [b"\0"] * 600, at=0.0, spacing_s=0.2)
+    gw.drain(extra_time_s=2000.0)
+    scaler.stop()
+
+    ready = [e for e in scaler.events if e[1] == "node-ready"]
+    drained = [e for e in scaler.events if e[1] == "drain"]
+    assert ready, "autoscaler never provisioned under gateway load"
+    assert drained, "autoscaler never scaled back in after the burst"
+    assert gw.metrics.r_success() == 600
+
+
+# ---------------------------------------------------------------- engine
+def test_engine_cold_then_warm_reuses_handle():
+    eb = EngineBackend()
+    gw = Gateway(eb)
+    gw.register(toy_real_runtime())
+    f1 = gw.invoke("toy", {"x": 1})
+    f2 = gw.invoke("toy", {"x": 2})
+    r1, r2 = gw.gather([f1, f2])
+    assert (eb.n_cold_starts, eb.n_warm_starts) == (1, 1)
+    assert f1.invocation.cold_start and not f2.invocation.cold_start
+    # the same setup() handle served both events (warm slot reuse)
+    assert (r1["calls"], r2["calls"]) == (1, 2)
+
+
+def test_engine_distinct_configs_are_distinct_instances():
+    """runtime_key = runtime + run config: a different config is a
+    different instance and must cold-start (paper same-configuration rule)."""
+    eb = EngineBackend()
+    gw = Gateway(eb)
+    gw.register(toy_real_runtime())
+    gw.invoke("toy", {"x": 1}, config={"model": "a"})
+    gw.invoke("toy", {"x": 2}, config={"model": "b"})
+    gw.drain()
+    assert (eb.n_cold_starts, eb.n_warm_starts) == (2, 0)
+    assert len(eb.warm_keys()) == 2
+
+
+def test_engine_warm_pool_lru_eviction():
+    eb = EngineBackend(max_warm=2)
+    gw = Gateway(eb)
+    gw.register(toy_real_runtime())
+    for m in ("a", "b", "c"):
+        gw.invoke("toy", {}, config={"model": m})
+    gw.drain()
+    assert eb.n_cold_starts == 3
+    assert len(eb.warm_keys()) == 2          # oldest ("a") evicted
+    gw.invoke("toy", {}, config={"model": "a"})
+    gw.drain()
+    assert eb.n_cold_starts == 4             # "a" had to cold-start again
+
+
+def test_engine_failure_is_unsuccessful_event_not_crash():
+    gw = Gateway(EngineBackend())
+    gw.register(toy_real_runtime(rid="bad", fail=True))
+    fut = gw.invoke("bad", {"x": 1})
+    gw.drain()
+    inv = fut.invocation
+    assert inv.r_end is not None and not inv.success
+    assert "boom" in inv.error
+    with pytest.raises(InvocationError):
+        fut.result()
+    # the failure record is still persisted for pollers
+    assert fut.poll()
+    assert gw.backend.store.get(inv.result_ref)["success"] is False
+
+
+def test_engine_cold_start_failure_is_unsuccessful_event():
+    """A setup() crash must settle as a failed event (and not stall the
+    rest of the pending queue), exactly like an fn() crash."""
+    def bad_setup():
+        raise MemoryError("weights do not fit")
+
+    eb = EngineBackend()
+    gw = Gateway(eb)
+    gw.register(RuntimeDef(
+        runtime_id="oom",
+        profiles={"host-jax": SimProfile(elat_median_s=0.01)},
+        fn=lambda d, c: {"ok": True}, setup=bad_setup))
+    gw.register(toy_real_runtime())
+    f_bad = gw.invoke("oom")
+    f_ok = gw.invoke("toy", {"x": 1})
+    gw.drain()
+    assert f_bad.done() and not f_bad.invocation.success
+    assert "cold-start failed" in f_bad.invocation.error
+    with pytest.raises(InvocationError):
+        f_bad.result()
+    assert f_ok.invocation.success      # queue kept draining past the crash
+    assert not eb.warm_keys() or "oom" not in eb.warm_keys()[0]
+
+
+def test_engine_setupless_runtime_is_always_cold():
+    """No setup() -> no compiled state to reuse -> never counted warm."""
+    eb = EngineBackend()
+    gw = Gateway(eb)
+    gw.register(RuntimeDef(
+        runtime_id="stateless",
+        profiles={"host-jax": SimProfile(elat_median_s=0.01)},
+        fn=lambda d, c: {"ok": True}))
+    gw.invoke("stateless")
+    gw.invoke("stateless")
+    gw.drain()
+    assert (eb.n_cold_starts, eb.n_warm_starts) == (2, 0)
+    assert eb.warm_keys() == []
+
+
+def test_map_spacing_without_at_staggers_arrivals():
+    gw = Gateway(SimBackend(paper_testbed(with_vpu=False)))
+    futs = gw.map("onnx-tinyyolov2", [b"a", b"b", b"c"], spacing_s=0.5)
+    starts = [f.invocation.r_start for f in futs]
+    assert starts[1] - starts[0] == pytest.approx(0.5)
+    assert starts[2] - starts[1] == pytest.approx(0.5)
+
+
+def test_engine_rejects_profile_only_runtime():
+    gw = Gateway(EngineBackend())
+    with pytest.raises(ValueError):
+        gw.register(RuntimeDef(
+            runtime_id="sim-only",
+            profiles={"host-jax": SimProfile(elat_median_s=1.0)}))
+
+
+def test_engine_timestamps_monotone_and_elat_measured():
+    import time
+
+    def slow_fn(data, config):
+        time.sleep(0.01)
+        return {"ok": True}
+
+    gw = Gateway(EngineBackend())
+    gw.register(RuntimeDef(
+        runtime_id="slow",
+        profiles={"host-jax": SimProfile(elat_median_s=0.01)}, fn=slow_fn))
+    fut = gw.invoke("slow")
+    fut.result()
+    inv = fut.invocation
+    assert inv.check_monotone()
+    assert inv.elat >= 0.01
