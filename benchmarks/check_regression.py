@@ -1,0 +1,78 @@
+"""Gate a BENCH_*.json run against a checked-in perf baseline.
+
+    python benchmarks/check_regression.py BENCH_gateway.json \
+        benchmarks/baseline.json
+
+Every metric in the baseline is a dotted path into the bench JSON
+(path segments may contain ``/`` but not ``.``).  All gated metrics are
+higher-is-better; the check fails when any current value falls more than
+``tolerance`` (default 0.2 = 20%) below its baseline.  Improvements are
+reported so the baseline can be ratcheted up in a follow-up commit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any
+
+
+def lookup(obj: Any, dotted: str) -> float:
+    for seg in dotted.split("."):
+        if not isinstance(obj, dict) or seg not in obj:
+            raise KeyError(f"path {dotted!r} missing at segment {seg!r}")
+        obj = obj[seg]
+    if not isinstance(obj, (int, float)):
+        raise TypeError(f"path {dotted!r} is {type(obj).__name__}, "
+                        f"not a number")
+    return float(obj)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench_json", help="current run (e.g. BENCH_gateway.json)")
+    ap.add_argument("baseline_json", help="checked-in floor "
+                                          "(benchmarks/baseline.json)")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="override the baseline file's tolerance fraction")
+    args = ap.parse_args(argv)
+
+    with open(args.bench_json) as f:
+        bench = json.load(f)
+    with open(args.baseline_json) as f:
+        baseline = json.load(f)
+    tol = args.tolerance if args.tolerance is not None else \
+        float(baseline.get("tolerance", 0.2))
+
+    failures, improved = [], []
+    for path, floor in baseline["metrics"].items():
+        try:
+            cur = lookup(bench, path)
+        except (KeyError, TypeError) as e:
+            failures.append(f"{path}: {e}")
+            continue
+        gate = floor * (1.0 - tol)
+        status = "FAIL" if cur < gate else "ok"
+        print(f"{status:4s} {path}: current={cur:.3f} "
+              f"baseline={floor:.3f} gate={gate:.3f}")
+        if cur < gate:
+            failures.append(f"{path}: {cur:.3f} < {gate:.3f} "
+                            f"(baseline {floor:.3f} - {tol:.0%})")
+        elif cur > floor * (1.0 + tol):
+            improved.append(path)
+
+    if improved:
+        print(f"improved beyond +{tol:.0%} (consider ratcheting baseline): "
+              + ", ".join(improved))
+    if failures:
+        print("throughput regression detected:", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    print(f"all {len(baseline['metrics'])} gated metrics within "
+          f"{tol:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,21 +1,30 @@
 """Benchmark harness — one entry per paper table/figure + framework
-benches. Prints ``name,us_per_call,derived`` CSV rows.
+benches.  Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH``
+additionally writes the rows plus each section's raw result dict as
+machine-readable JSON (the ``BENCH_*.json`` perf-trajectory format CI's
+bench-smoke job records and gates on).
 
     PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run --only gateway \
+        --json BENCH_gateway.json
 """
 from __future__ import annotations
 
-import sys
+import argparse
+import json
 import time
+from typing import Any, Callable, Dict, List, Tuple
+
+_ROWS: List[Dict[str, Any]] = []
 
 
 def _row(name: str, us: float, derived: str) -> None:
+    _ROWS.append({"name": name, "us_per_call": round(us, 1),
+                  "derived": derived})
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
-def main() -> None:
-    print("name,us_per_call,derived")
-
+def _sec_scaling() -> Dict[str, Any]:
     # --- Fig 3 / Fig 4: scaling workload, dual-GPU vs all accelerators ---
     from benchmarks.bench_scaling import bench as scaling_bench
     t0 = time.perf_counter()
@@ -40,8 +49,11 @@ def main() -> None:
     _row("c3_rlat_max_all_accel", us,
          f"rlat_max={s['c3_all_accel']['rlat_max']:.1f}s "
          f"(paper claim C3: higher than dual-gpu)")
+    return s
 
-    # --- §V.B ELat medians ------------------------------------------------
+
+def _sec_elat() -> Dict[str, Any]:
+    # --- §V.B ELat medians ---------------------------------------------
     from benchmarks.bench_elat import bench as elat_bench
     t0 = time.perf_counter()
     e = elat_bench()
@@ -50,8 +62,11 @@ def main() -> None:
          f"{e['median_elat_gpu_s']*1e3:.0f}ms (paper 1675ms)")
     _row("elat_median_vpu", us,
          f"{e['median_elat_vpu_s']*1e3:.0f}ms (paper 1577ms)")
+    return e
 
-    # --- beyond paper: scheduler ablation ---------------------------------
+
+def _sec_scheduler() -> Dict[str, Any]:
+    # --- beyond paper: scheduler ablation -------------------------------
     from benchmarks.bench_scheduler import bench as sched_bench
     t0 = time.perf_counter()
     p = sched_bench()
@@ -60,8 +75,11 @@ def main() -> None:
         _row(f"scheduler_{pol}", us,
              f"cold={r['cold_starts']} p50={r['rlat_p50']:.2f}s "
              f"p99={r['rlat_p99']:.2f}s cost=${r['cost_usd']:.3f}")
+    return p
 
-    # --- beyond paper: elasticity (autoscaler) -----------------------------
+
+def _sec_elasticity() -> Dict[str, Any]:
+    # --- beyond paper: elasticity (autoscaler) --------------------------
     from benchmarks.bench_elasticity import bench as elas_bench
     t0 = time.perf_counter()
     el = elas_bench()
@@ -70,26 +88,41 @@ def main() -> None:
         _row(f"elasticity_{name}", us,
              f"p50={r['rlat_p50']:.2f}s p99={r['rlat_p99']:.2f}s "
              f"node_s={r['node_seconds']:.0f}")
+    return el
 
-    # --- beyond paper: gateway policy comparison --------------------------
+
+def _sec_gateway() -> Dict[str, Any]:
+    # --- gateway: sim policies + engine serial-vs-batched ---------------
     from benchmarks.bench_gateway import bench as gw_bench
     t0 = time.perf_counter()
-    g = gw_bench()
-    us = (time.perf_counter() - t0) * 1e6 / 3
+    g = gw_bench(real=True)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(g), 1)
     for name, r in g.items():
-        _row(f"gateway_{name.replace('/', '_')}", us,
-             f"elat_p50={r['elat_p50_s']:.2f}s rlat_p50={r['rlat_p50_s']:.2f}s "
-             f"cold={r['cold_starts']} tput={r['throughput_per_s']:.2f}/s")
+        if "throughput_per_s" in r:
+            _row(f"gateway_{name.replace('/', '_')}", us,
+                 f"elat_p50={r['elat_p50_s']:.2f}s "
+                 f"rlat_p50={r['rlat_p50_s']:.2f}s "
+                 f"cold={r['cold_starts']} "
+                 f"tput={r['throughput_per_s']:.2f}/s")
+    _row("gateway_engine_speedup", us,
+         f"batched_vs_serial="
+         f"{g['engine/speedup']['batched_vs_serial_speedup']:.2f}x")
+    return g
 
-    # --- serving engine (real JAX execution) ------------------------------
+
+def _sec_serving() -> Dict[str, Any]:
+    # --- serving engine (real JAX execution) ----------------------------
     from benchmarks.bench_serving import bench as serving_bench
     t0 = time.perf_counter()
     v = serving_bench()
-    us = (time.perf_counter() - t0) * 1e6
+    _ = (time.perf_counter() - t0) * 1e6
     _row("serving_engine_reduced", v["us_per_decode_step"],
          f"tokens_per_s={v['tokens_per_s']:.1f}")
+    return v
 
-    # --- roofline table (from the dry-run sweep, if present) --------------
+
+def _sec_roofline() -> Dict[str, Any]:
+    # --- roofline table (from the dry-run sweep, if present) ------------
     from benchmarks.bench_roofline import bench as roof_bench
     t0 = time.perf_counter()
     r = roof_bench()
@@ -103,6 +136,47 @@ def main() -> None:
              f"dominant={r['dominant_histogram']}")
         for arch, shape, frac in r["worst_roofline_fraction"]:
             _row(f"roofline_worst_{arch}_{shape}", us, f"fraction={frac}")
+    return r
+
+
+SECTIONS: List[Tuple[str, Callable[[], Dict[str, Any]]]] = [
+    ("scaling", _sec_scaling),
+    ("elat", _sec_elat),
+    ("scheduler", _sec_scheduler),
+    ("elasticity", _sec_elasticity),
+    ("gateway", _sec_gateway),
+    ("serving", _sec_serving),
+    ("roofline", _sec_roofline),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run only sections whose name contains this "
+                         f"substring (of: {[n for n, _ in SECTIONS]})")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + per-section raw results as "
+                         "JSON (e.g. BENCH_gateway.json)")
+    args = ap.parse_args(argv)
+
+    picked = [(n, f) for n, f in SECTIONS
+              if args.only is None or args.only in n]
+    if not picked:
+        ap.error(f"--only {args.only!r} matches no section "
+                 f"(have: {[n for n, _ in SECTIONS]})")
+
+    _ROWS.clear()               # fresh trajectory per in-process run
+    print("name,us_per_call,derived")
+    results: Dict[str, Any] = {}
+    for name, fn in picked:
+        results[name] = fn()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"sections": results, "rows": _ROWS}, f, indent=2,
+                      default=str)
+        print(f"# wrote {args.json}", flush=True)
 
 
 if __name__ == "__main__":

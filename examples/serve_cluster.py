@@ -8,7 +8,6 @@ full Hardless §IV lifecycle with actual model execution on this host.
 
     PYTHONPATH=src python examples/serve_cluster.py
 """
-import jax
 
 from repro.configs import get_config
 from repro.core.accelerator import AcceleratorSpec

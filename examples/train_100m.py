@@ -6,7 +6,6 @@ drives the 256-chip dry-run) -> checkpoints into the Hardless object store.
 (defaults target "a few hundred steps"; use --steps 20 for a quick look)
 """
 import argparse
-import dataclasses
 import time
 
 import jax

@@ -8,7 +8,7 @@ GPU, a VPU stick, or — in the TPU adaptation — a pod mesh *slice*.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,8 +8,7 @@ with service times calibrated to the paper's measured tiny-YOLOv2 medians.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 from repro.core.accelerator import Accelerator, AcceleratorSpec
 from repro.core.events import Invocation

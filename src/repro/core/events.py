@@ -37,6 +37,7 @@ class Invocation:
     cold_start: bool = False
     result_ref: Optional[str] = None
     error: Optional[str] = None
+    rejected: bool = False              # shed at admission (backpressure)
 
     # ------------------------------------------------------------------
     @property

@@ -7,7 +7,6 @@ completions over the trailing 10 s window), and #queued timelines.
 from __future__ import annotations
 
 import bisect
-import dataclasses
 import statistics
 from typing import Dict, List, Optional, Tuple
 

@@ -11,10 +11,10 @@ from __future__ import annotations
 import random
 from typing import Dict, List, Optional
 
-from repro.core.accelerator import Accelerator, AcceleratorSpec
+from repro.core.accelerator import Accelerator
 from repro.core.events import Invocation
 from repro.core.queue import ScannableQueue
-from repro.core.runtime import RuntimeDef, RuntimeRegistry
+from repro.core.runtime import RuntimeRegistry
 from repro.core.scheduler import Scheduler, WarmAffinityScheduler
 from repro.core.storage import ObjectStore
 

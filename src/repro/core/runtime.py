@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import random
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 
 # accelerator type advertised for runtimes executing directly on this
@@ -49,6 +49,19 @@ class RuntimeDef:
     # setup fn for real cold starts (compile/weights); returns a handle
     setup: Optional[Callable[[], Any]] = None
     artifact_bytes: int = 60 << 20   # runtime image size in object storage
+    # batched real-execution entry point (optional): one call serves a
+    # micro-batch of same-runtime_key events.  batch_fn(datas, config) ->
+    # list of results aligned with ``datas``; ``config`` is the (shared)
+    # run configuration plus ``handle`` and ``n_real`` (the count of real
+    # events when the dispatcher padded the batch to a bucket size).
+    batch_fn: Optional[Callable[[List[Any], Dict[str, Any]], List[Any]]] = None
+    # largest micro-batch one batch_fn call may serve (1 = never batched)
+    max_batch: int = 1
+    # optional pad-to-bucket sizes (ascending).  When set, the dispatcher
+    # pads a partial batch up to the next bucket by repeating the last
+    # payload so a jitted batch_fn only ever sees these leading batch
+    # shapes (bounded jit cache); results past ``n_real`` are discarded.
+    batch_buckets: Optional[Tuple[int, ...]] = None
 
     def supports(self, acc_type: str) -> bool:
         return acc_type in self.profiles
@@ -57,7 +70,48 @@ class RuntimeDef:
     def is_real(self) -> bool:
         """True when invocations execute actual code on this host (the
         gateway's engine backend requires this; the sim backend ignores it)."""
-        return self.fn is not None
+        return self.fn is not None or self.batch_fn is not None
+
+    @property
+    def is_batchable(self) -> bool:
+        return self.batch_fn is not None and self.max_batch > 1
+
+    def batch_limit(self, backend_max: int) -> int:
+        """Largest micro-batch the dispatcher may form for this runtime."""
+        if self.batch_fn is None:
+            return 1
+        limit = min(self.max_batch, backend_max)
+        if self.batch_buckets:
+            limit = min(limit, max(self.batch_buckets))
+        return max(limit, 1)
+
+    def bucket_size(self, n: int) -> int:
+        """Padded batch size for ``n`` real events (pad-to-bucket shapes)."""
+        if not self.batch_buckets:
+            return n
+        fits = [b for b in self.batch_buckets if b >= n]
+        return min(fits) if fits else n
+
+
+def run_batch(rdef: RuntimeDef, datas: Sequence[Any],
+              config: Dict[str, Any]) -> List[Any]:
+    """Execute one micro-batch through ``rdef``'s best entry point.
+
+    Pads to the runtime's bucket size, calls ``batch_fn`` once (or falls
+    back to per-event ``fn`` calls when the runtime is not batchable), and
+    returns exactly ``len(datas)`` results.
+    """
+    datas = list(datas)
+    n = len(datas)
+    if rdef.batch_fn is not None and (n > 1 or rdef.fn is None):
+        padded = datas + [datas[-1]] * (rdef.bucket_size(n) - n)
+        results = list(rdef.batch_fn(padded, dict(config, n_real=n)))
+        if len(results) < n:
+            raise RuntimeError(
+                f"batch_fn for {rdef.runtime_id!r} returned {len(results)} "
+                f"results for a batch of {n}")
+        return results[:n]
+    return [rdef.fn(data, dict(config)) for data in datas]
 
 
 class RuntimeRegistry:

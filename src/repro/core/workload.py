@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 from repro.core.events import Invocation
 

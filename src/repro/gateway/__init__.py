@@ -1,8 +1,9 @@
 """Unified Hardless invocation gateway: one ``invoke()`` path over the
 calibrated cluster simulation and real JAX execution on this host."""
 from repro.gateway.backends import Backend, EngineBackend, SimBackend
-from repro.gateway.future import InvocationError, InvocationFuture
+from repro.gateway.future import (InvocationError, InvocationFuture,
+                                  InvocationRejected)
 from repro.gateway.gateway import Gateway
 
-__all__ = ["Backend", "EngineBackend", "SimBackend",
-           "Gateway", "InvocationError", "InvocationFuture"]
+__all__ = ["Backend", "EngineBackend", "SimBackend", "Gateway",
+           "InvocationError", "InvocationFuture", "InvocationRejected"]

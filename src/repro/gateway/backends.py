@@ -7,22 +7,26 @@ gateway runs unchanged on either:
 * :class:`SimBackend`    — the event-driven cluster simulation
   (``core.cluster.Cluster``): scannable queue, node managers, calibrated
   service times, discrete-event clock.
-* :class:`EngineBackend` — real execution on this host's JAX devices,
-  adapting the ``RuntimeDef.setup``/``fn`` protocol directly: cold start is
-  ``setup()`` (jit compilation + weight materialization, e.g. a
-  ``serve.engine.ServingEngine``), warm start reuses the live handle keyed
-  on the paper's same-configuration ``runtime_key``.
+* :class:`EngineBackend` — real concurrent execution on this host's JAX
+  devices: a worker thread per local device pulls micro-batches of
+  compatible pending events (same ``runtime_key``) from a bounded
+  admission queue, pads them to bucket shapes, and serves each batch with
+  one ``RuntimeDef.batch_fn`` call (falling back to per-event ``fn``).
+  Cold start is ``setup()`` (jit compilation + weight materialization,
+  e.g. a ``serve.engine.ServingEngine``), warm start reuses the live
+  handle keyed on the paper's same-configuration ``runtime_key``.
 """
 from __future__ import annotations
 
+import threading
 import time
-from collections import OrderedDict
-from typing import Any, List, Optional
+from collections import OrderedDict, deque
+from typing import Any, Deque, List, Optional
 
 from repro.core.cluster import Cluster
 from repro.core.events import Invocation
 from repro.core.metrics import MetricsCollector
-from repro.core.runtime import HOST_ACC, RuntimeDef, RuntimeRegistry
+from repro.core.runtime import HOST_ACC, RuntimeDef, RuntimeRegistry, run_batch
 from repro.core.storage import ObjectStore
 
 
@@ -47,6 +51,10 @@ class Backend:
     def now(self) -> float:
         raise NotImplementedError
 
+    def backlog(self) -> int:
+        """Submitted-but-unsettled event count (0 when fully drained)."""
+        raise NotImplementedError
+
 
 class SimBackend(Backend):
     """The calibrated discrete-event cluster behind the gateway API."""
@@ -58,11 +66,13 @@ class SimBackend(Backend):
         self.store = self.cluster.store
         self.registry = self.cluster.registry
         self.metrics = self.cluster.metrics
+        self._n_submitted = 0
 
     def register(self, rdef: RuntimeDef) -> None:
         self.cluster.register_runtime(rdef)
 
     def submit(self, inv: Invocation) -> None:
+        self._n_submitted += 1
         self.cluster.submit(inv)
 
     def drain(self, extra_time_s: float = 600.0) -> None:
@@ -71,108 +81,362 @@ class SimBackend(Backend):
     def now(self) -> float:
         return self.cluster.clock.now()
 
+    def backlog(self) -> int:
+        return self._n_submitted - len(self.metrics.completed)
+
+
+class _KeyQueue:
+    """Pending events for one ``runtime_key`` (one warm instance)."""
+
+    __slots__ = ("items", "deadline")
+
+    def __init__(self):
+        self.items: Deque[Invocation] = deque()
+        self.deadline: Optional[float] = None   # batch-close wall deadline
+
 
 class EngineBackend(Backend):
-    """Real execution on this host, FIFO over submitted events.
+    """Real concurrent execution on this host's JAX devices.
 
-    One warm pool of runtime handles (``runtime_key`` -> ``setup()`` result,
-    LRU-bounded by ``max_warm``) stands in for the node manager's resident
-    instances; ELat is measured wall time of the actual JAX execution, and
-    results are persisted to the object store exactly like the sim path.
+    Dispatcher shape:
+
+    * **admission** — ``submit()`` enqueues into a per-``runtime_key``
+      pending queue under one bounded budget (``max_queue`` unsettled
+      events).  Over budget, the event is *shed*: it settles immediately
+      as an unsuccessful, ``rejected`` invocation whose failure record is
+      persisted like any other outcome — backpressure surfaced through
+      the ordinary gateway future.
+    * **workers** — one thread per local JAX device (``n_workers``
+      overrides).  Each worker claims the oldest *ready* key, takes up to
+      ``min(max_batch, rdef.max_batch)`` events from it, and executes
+      them as one micro-batch.  A key is ready when its batch is full or
+      its oldest event has waited ``batch_wait_s`` (the max-wait deadline
+      that keeps latency from starving on a trickle of traffic).
+    * **per-key serialization** — at most one worker runs a given
+      ``runtime_key`` at a time (a warm instance is single-threaded, the
+      paper's runtime-instance model); concurrency comes from distinct
+      keys on distinct workers, throughput within a key from batching.
+    * **warm pool** — one LRU pool of ``runtime_key -> setup()`` handles
+      (``max_warm``) shared across workers, exactly as before.
+
+    Batches are padded to the runtime's ``batch_buckets`` so a jitted
+    ``batch_fn`` sees a bounded set of leading batch shapes.
     """
 
     name = "engine"
 
-    def __init__(self, *, max_warm: int = 4, accelerator: str = HOST_ACC):
+    def __init__(self, *, max_warm: int = 4, accelerator: str = HOST_ACC,
+                 n_workers: Optional[int] = None, max_batch: int = 8,
+                 batch_wait_s: float = 0.002, max_queue: int = 256):
         self.store = ObjectStore()
         self.registry = RuntimeRegistry()
         self.metrics = MetricsCollector()
         self.max_warm = max_warm
         self.accelerator = accelerator
+        self.max_batch = max(int(max_batch), 1)
+        self.batch_wait_s = max(float(batch_wait_s), 0.0)
+        self.max_queue = max(int(max_queue), 1)
         self.n_cold_starts = 0
         self.n_warm_starts = 0
+        self.n_rejected = 0
+        self.n_batches = 0
+        self.batch_sizes: List[int] = []
         self._handles: "OrderedDict[str, Any]" = OrderedDict()
-        self._pending: List[Invocation] = []
         self._t0 = time.monotonic()
+
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)     # pending changed
+        self._settled = threading.Condition(self._lock)  # events settled
+        self._queues: "OrderedDict[str, _KeyQueue]" = OrderedDict()
+        self._busy_keys: set = set()
+        self._n_pending = 0
+        self._n_inflight = 0
+        self._n_workers_req = n_workers
+        self._workers: List[threading.Thread] = []
+        self._devices: List[Any] = []
+        self._shutdown = False
+
+    # -- lifecycle -------------------------------------------------------
+    def _start_workers_locked(self) -> None:
+        if self._workers or self._shutdown:
+            return
+        n = self._n_workers_req
+        try:
+            import jax
+            self._devices = list(jax.devices())
+        except Exception:
+            self._devices = []
+        if n is None:
+            n = len(self._devices) or 1
+        self.n_workers = max(int(n), 1)
+        for w in range(self.n_workers):
+            t = threading.Thread(target=self._worker_loop, args=(w,),
+                                 name=f"engine-w{w}", daemon=True)
+            self._workers.append(t)
+            t.start()
+
+    def shutdown(self) -> None:
+        """Stop the worker threads (pending events are left unsettled)."""
+        with self._lock:
+            self._shutdown = True
+            self._work.notify_all()
+        for t in self._workers:
+            t.join(timeout=5.0)
 
     def now(self) -> float:
         return time.monotonic() - self._t0
 
+    # -- catalogue -------------------------------------------------------
     def register(self, rdef: RuntimeDef) -> None:
         if not rdef.is_real:
             raise ValueError(
-                f"runtime {rdef.runtime_id!r} has no real fn — the engine "
-                f"backend executes actual code; use the sim backend for "
-                f"profile-only runtimes")
+                f"runtime {rdef.runtime_id!r} has no real fn/batch_fn — the "
+                f"engine backend executes actual code; use the sim backend "
+                f"for profile-only runtimes")
         self.registry.register(rdef)
         self.store.put(b"\0" * min(rdef.artifact_bytes, 1 << 16),
                        key=f"runtime:{rdef.runtime_id}")
 
+    # -- admission (bounded; sheds on overload) --------------------------
     def submit(self, inv: Invocation) -> None:
         if inv.runtime_id not in self.registry:
             raise KeyError(f"unknown runtime {inv.runtime_id!r}")
         inv.r_start = self.now() if inv.r_start is None else inv.r_start
-        self._pending.append(inv)
+        with self._lock:
+            if self._shutdown:
+                # no workers will ever serve this — settle it immediately
+                # instead of stranding it in the queue
+                self._reject_locked(
+                    inv, err="rejected: engine backend is shut down")
+                return
+            if self._n_pending + self._n_inflight >= self.max_queue:
+                self._reject_locked(inv)
+                return
+            self._start_workers_locked()
+            kq = self._queues.get(inv.runtime_key)
+            if kq is None:
+                kq = self._queues[inv.runtime_key] = _KeyQueue()
+            if not kq.items:
+                kq.deadline = time.monotonic() + self.batch_wait_s
+            kq.items.append(inv)
+            self._n_pending += 1
+            self._work.notify()
+
+    def _reject_locked(self, inv: Invocation,
+                       err: Optional[str] = None) -> None:
+        """Settle a shed event as a rejected, unsuccessful one."""
+        now = self.now()
+        inv.n_start = inv.e_start = inv.e_end = inv.n_end = \
+            max(now, inv.r_start or 0.0)
+        inv.r_end = inv.n_end
+        inv.rejected = True
+        inv.success = False
+        inv.error = err or (f"rejected: engine admission queue full "
+                            f"({self.max_queue} unsettled events) — "
+                            f"backpressure")
+        self.store.persist_outcome(inv, None, inv.error)
+        self.metrics.record(inv)
+        self.n_rejected += 1
+        self._settled.notify_all()
+
+    # -- completion waits ------------------------------------------------
+    def backlog(self) -> int:
+        with self._lock:
+            return self._n_pending + self._n_inflight
 
     def drain(self, extra_time_s: float = 600.0) -> None:
-        # execute in RStart order (the closest real-time analogue of the
-        # sim's arrival-ordered queue; events still run back-to-back)
-        self._pending.sort(key=lambda i: (i.r_start or 0.0, i.inv_id))
-        while self._pending:
-            self._execute(self._pending.pop(0))
+        deadline = time.monotonic() + extra_time_s
+        with self._lock:
+            while self._n_pending or self._n_inflight:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return
+                self._settled.wait(timeout=min(remaining, 0.25))
 
-    # ------------------------------------------------------------------
-    def _execute(self, inv: Invocation) -> None:
-        rdef = self.registry.get(inv.runtime_id)
-        inv.n_start = max(self.now(), inv.r_start or 0.0)
-        inv.node = "local"
-        inv.accelerator = f"local/acc0({self.accelerator})"
+    def wait(self, inv: Invocation, timeout_s: float = 600.0) -> bool:
+        """Block until ``inv`` settles (per-event wait — no full drain)."""
+        deadline = time.monotonic() + timeout_s
+        with self._lock:
+            while inv.r_end is None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._settled.wait(timeout=min(remaining, 0.25))
+        return inv.r_end is not None
 
-        key = inv.runtime_key
-        # runtimes without setup() have no compiled state to reuse: every
-        # invocation is a cold start and nothing enters the warm pool
-        warm = rdef.setup is not None and key in self._handles
-        inv.cold_start = not warm
-        err = None
-        handle = None
-        if warm:
-            self.n_warm_starts += 1
-            self._handles.move_to_end(key)
-            handle = self._handles[key]
+    # -- dispatcher ------------------------------------------------------
+    def _ready_locked(self, key: str, kq: _KeyQueue, now: float) -> bool:
+        rdef = self.registry.get(kq.items[0].runtime_id)
+        limit = rdef.batch_limit(self.max_batch)
+        return len(kq.items) >= limit or \
+            (kq.deadline is not None and now >= kq.deadline)
+
+    def _pick_locked(self):
+        """(batch, key) ready to run, or (None, earliest deadline|None)."""
+        now = time.monotonic()
+        best_key, best_start = None, None
+        wake_at = None
+        for key, kq in self._queues.items():
+            if key in self._busy_keys or not kq.items:
+                continue
+            head_start = kq.items[0].r_start or 0.0
+            if self._ready_locked(key, kq, now):
+                if best_key is None or head_start < best_start:
+                    best_key, best_start = key, head_start
+            elif kq.deadline is not None:
+                wake_at = kq.deadline if wake_at is None else \
+                    min(wake_at, kq.deadline)
+        if best_key is None:
+            return None, wake_at
+        kq = self._queues[best_key]
+        rdef = self.registry.get(kq.items[0].runtime_id)
+        limit = rdef.batch_limit(self.max_batch)
+        batch = [kq.items.popleft() for _ in range(min(limit, len(kq.items)))]
+        if kq.items:
+            kq.deadline = time.monotonic() + self.batch_wait_s
         else:
-            self.n_cold_starts += 1
-            if rdef.setup is not None:
-                try:
-                    handle = rdef.setup()
-                except Exception as e:  # noqa: BLE001 — unsuccessful event
-                    err = f"cold-start failed: {e!r}"
-                else:
-                    self._handles[key] = handle
-                    while len(self._handles) > self.max_warm:
-                        self._handles.popitem(last=False)
+            del self._queues[best_key]      # bounded key map
+        self._busy_keys.add(best_key)
+        self._n_pending -= len(batch)
+        self._n_inflight += len(batch)
+        return batch, best_key
 
-        data = (self.store.get(inv.data_ref)
-                if inv.data_ref in self.store else None)
-        inv.e_start = max(self.now(), inv.n_start)
+    def _worker_loop(self, widx: int) -> None:
+        while True:
+            with self._lock:
+                batch = None
+                while batch is None:
+                    if self._shutdown:
+                        return
+                    batch, key_or_wake = self._pick_locked()
+                    if batch is None:
+                        timeout = None if key_or_wake is None else \
+                            max(key_or_wake - time.monotonic(), 0.0)
+                        self._work.wait(timeout=timeout)
+                key = key_or_wake
+            try:
+                self._execute_batch(widx, batch)
+            except Exception as e:  # noqa: BLE001 — never kill the worker
+                self._settle_failed(batch, f"engine dispatcher error: {e!r}")
+            finally:
+                with self._lock:
+                    self._busy_keys.discard(key)
+                    self._n_inflight -= len(batch)
+                    self._work.notify_all()
+                    self._settled.notify_all()
+
+    def _settle_failed(self, batch: List[Invocation], err: str) -> None:
+        """Last-resort settlement: a dispatcher bug or unserializable
+        outcome must fail the events, not strand them (a dead worker would
+        leave every pending event unsettled forever)."""
+        now = self.now()
+        with self._lock:
+            for inv in batch:
+                if inv.r_end is not None:
+                    continue
+                inv.n_start = inv.n_start if inv.n_start is not None \
+                    else max(now, inv.r_start or 0.0)
+                inv.e_start = inv.e_start if inv.e_start is not None \
+                    else inv.n_start
+                inv.e_end = max(inv.e_start, now)
+                inv.n_end = inv.e_end
+                inv.r_end = inv.n_end
+                inv.success = False
+                inv.error = err
+                try:
+                    self.store.persist_outcome(inv, None, err)
+                except Exception:   # noqa: BLE001 — store itself broken
+                    pass
+                self.metrics.record(inv)
+
+    # -- execution -------------------------------------------------------
+    def _acquire_handle(self, rdef: RuntimeDef, key: str):
+        """(handle, cold, err) for one warm instance; LRU insert on cold."""
+        if rdef.setup is None:
+            with self._lock:
+                self.n_cold_starts += 1
+            return None, True, None
+        with self._lock:
+            if key in self._handles:
+                self.n_warm_starts += 1
+                self._handles.move_to_end(key)
+                return self._handles[key], False, None
+            self.n_cold_starts += 1
+        try:
+            handle = rdef.setup()           # slow: jit + weights (unlocked)
+        except Exception as e:  # noqa: BLE001 — unsuccessful event
+            return None, True, f"cold-start failed: {e!r}"
+        with self._lock:
+            self._handles[key] = handle
+            while len(self._handles) > self.max_warm:
+                self._handles.popitem(last=False)
+        return handle, True, None
+
+    def _execute_batch(self, widx: int, batch: List[Invocation]) -> None:
+        rdef = self.registry.get(batch[0].runtime_id)
+        key = batch[0].runtime_key
+        acc = f"local/w{widx}({self.accelerator})"
+        for inv in batch:
+            inv.n_start = max(self.now(), inv.r_start or 0.0)
+            inv.node = f"local/w{widx}"
+            inv.accelerator = acc
+
+        handle, cold, err = self._acquire_handle(rdef, key)
+        for inv in batch:
+            inv.cold_start = cold
+
+        datas = [self.store.get(inv.data_ref)
+                 if inv.data_ref in self.store else None for inv in batch]
+        e_start = max([self.now()] + [inv.n_start for inv in batch])
         t0 = self.now()
-        result = None
+        results: List[Any] = [None] * len(batch)
         if err is None:
             try:
-                result = rdef.fn(data, dict(inv.config, handle=handle))
-            except Exception as e:      # noqa: BLE001 — unsuccessful event
+                with self._on_device(widx):
+                    results = run_batch(
+                        rdef, datas, dict(batch[0].config, handle=handle))
+            except Exception as e:  # noqa: BLE001 — unsuccessful events
                 err = repr(e)
-        inv.e_end = inv.e_start + (self.now() - t0)   # measured wall ELat
+        e_end = e_start + (self.now() - t0)     # measured wall ELat
 
-        self.store.persist_outcome(inv, result, err)
-        inv.n_end = inv.e_end
-        inv.r_end = max(self.now(), inv.n_end)
-        inv.success = err is None
-        inv.error = err
-        self.metrics.record(inv)
+        # persist outcomes before taking the dispatcher lock (pickling a
+        # large result must not stall submit() or the other workers); the
+        # events only become visible as settled (r_end) under the lock
+        errs: List[Optional[str]] = []
+        for inv, result in zip(batch, results):
+            inv.e_start, inv.e_end = e_start, e_end
+            inv_err = err
+            try:
+                self.store.persist_outcome(inv, result, inv_err)
+            except Exception as e:  # noqa: BLE001 — unserializable result
+                inv_err = f"result persist failed: {e!r}"
+                self.store.persist_outcome(inv, None, inv_err)
+            errs.append(inv_err)
+
+        with self._lock:
+            self.n_batches += 1
+            self.batch_sizes.append(len(batch))
+            for inv, inv_err in zip(batch, errs):
+                inv.n_end = inv.e_end
+                inv.r_end = max(self.now(), inv.n_end)
+                inv.success = inv_err is None
+                inv.error = inv_err
+                self.metrics.record(inv)
+
+    def _on_device(self, widx: int):
+        """Pin this worker's batch to its local device (no-op without jax)."""
+        if self._devices:
+            import jax
+            return jax.default_device(
+                self._devices[widx % len(self._devices)])
+        import contextlib
+        return contextlib.nullcontext()
 
     # -- warm-pool introspection ----------------------------------------
     def warm_keys(self) -> List[str]:
-        return list(self._handles)
+        with self._lock:
+            return list(self._handles)
 
     def handle(self, runtime_key: str) -> Any:
-        return self._handles.get(runtime_key)
+        with self._lock:
+            return self._handles.get(runtime_key)

@@ -3,7 +3,9 @@
 Hardless events are async-only (§IV-B): the client gets a handle at submit
 time and the result lands in object storage.  ``InvocationFuture`` is that
 handle — ``poll()`` is the non-blocking object-store check, ``result()``
-the blocking wait (which drives the backend until the event settles).
+the blocking wait.  Backends that execute concurrently (the engine
+dispatcher) expose a per-event ``wait()``, so ``result()`` blocks only on
+*this* event; otherwise it falls back to driving a full backend drain.
 """
 from __future__ import annotations
 
@@ -21,6 +23,11 @@ class InvocationError(RuntimeError):
         self.invocation = inv
 
 
+class InvocationRejected(InvocationError):
+    """The backend shed this event at admission (bounded-queue
+    backpressure): it never executed.  Retrying later is safe."""
+
+
 class InvocationFuture:
     def __init__(self, inv: Invocation, backend):
         self.invocation = inv
@@ -33,6 +40,10 @@ class InvocationFuture:
 
     def done(self) -> bool:
         return self.invocation.r_end is not None
+
+    def rejected(self) -> bool:
+        """True when admission backpressure shed this event unexecuted."""
+        return self.invocation.rejected
 
     def poll(self) -> bool:
         """Non-blocking completion check against the object store — the
@@ -52,18 +63,24 @@ class InvocationFuture:
     def result(self, *, extra_time_s: float = 600.0) -> Any:
         """Block until the invocation settles; return the stored result.
 
-        Raises :class:`InvocationError` on execution failure or timeout,
+        Raises :class:`InvocationRejected` if the event was shed by
+        backpressure, :class:`InvocationError` on execution failure,
         ``TimeoutError`` if the backend drains without the event settling.
         """
         if not self.done():
-            self._backend.drain(extra_time_s=extra_time_s)
+            wait = getattr(self._backend, "wait", None)
+            if wait is not None:
+                wait(self.invocation, timeout_s=extra_time_s)
+            else:
+                self._backend.drain(extra_time_s=extra_time_s)
         if not self.done():
             raise TimeoutError(
                 f"invocation {self.inv_id} did not settle within drain "
                 f"window (+{extra_time_s}s)")
         inv = self.invocation
         if not inv.success:
-            raise InvocationError(inv)
+            raise InvocationRejected(inv) if inv.rejected \
+                else InvocationError(inv)
         if inv.result_ref is not None and inv.result_ref in self._backend.store:
             return self._backend.store.get(inv.result_ref)
         return None

@@ -54,8 +54,12 @@ class Gateway:
         pass ``data_ref`` instead to reuse an already-staged object.  ``at``
         pins the event's RStart on the backend clock (default "now"): the
         sim backend replays arrivals at exactly those times; the engine
-        backend executes at drain time in RStart order, so ``at`` controls
-        ordering and the recorded timestamps, not wall-clock delay.
+        backend starts executing as soon as a worker is free (micro-
+        batching compatible events), so there ``at`` only controls the
+        recorded timestamps, not wall-clock delay.  Under backpressure the
+        engine backend may shed the event at admission — the returned
+        future then reports ``rejected()`` and ``result()`` raises
+        :class:`InvocationRejected`.
         """
         if payload is not None and data_ref is not None:
             raise ValueError("pass either payload or data_ref, not both")
@@ -106,6 +110,11 @@ class Gateway:
     @property
     def metrics(self):
         return self.backend.metrics
+
+    def backlog(self) -> int:
+        """Submitted-but-unsettled events at the backend (queue depth +
+        in-flight) — the client-visible backpressure signal."""
+        return self.backend.backlog()
 
     def summary(self) -> Dict[str, float]:
         return self.backend.metrics.summary()

@@ -12,7 +12,6 @@ accumulator over k.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

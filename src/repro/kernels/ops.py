@@ -11,7 +11,6 @@
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -7,7 +7,6 @@ without materializing S×S score matrices.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -33,12 +33,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import (BlockKind, Family, InputShape, ModelConfig,
+from repro.configs.base import (BlockKind, InputShape, ModelConfig,
                                 SHAPES, get_config, input_specs, list_archs)
 from repro.launch.mesh import make_production_mesh, mesh_chips
 from repro.models import model as M
 from repro.models import sharding as S
-from repro.models.param import abstract_params, axes_tree, param_bytes, tree_map_specs
+from repro.models.param import tree_map_specs
 from repro.roofline.analysis import build_report
 from repro.train.optimizer import AdamWConfig, AdamWState
 from repro.train.train_loop import train_step

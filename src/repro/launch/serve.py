@@ -42,6 +42,14 @@ def main(argv=None):
                     help="simulate full-size configs with roofline-derived "
                          "service times instead of real reduced execution "
                          "(sim backend only)")
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="engine backend: largest micro-batch of compatible "
+                         "events one jitted call may serve (default 8; "
+                         "1 disables batching)")
+    ap.add_argument("--batch-wait-ms", type=float, default=None,
+                    help="engine backend: max wait for a micro-batch to "
+                         "fill before dispatching a partial one "
+                         "(default 2 ms)")
     args = ap.parse_args(argv)
     if args.backend == "engine":
         if args.sim:
@@ -49,9 +57,14 @@ def main(argv=None):
                      "executes real code)")
         if args.pods is not None or args.scheduler is not None:
             ap.error("--pods/--scheduler only apply to --backend sim "
-                     "(the engine backend is single-host FIFO)")
+                     "(the engine backend schedules on this host's devices)")
+    elif args.max_batch is not None or args.batch_wait_ms is not None:
+        ap.error("--max-batch/--batch-wait-ms only apply to "
+                 "--backend engine (the sim models batching in its "
+                 "service-time profiles)")
     pods = args.pods if args.pods is not None else 2
     scheduler = args.scheduler if args.scheduler is not None else "warm"
+    max_batch = args.max_batch if args.max_batch is not None else 8
 
     acc_type = "v5e-4x4" if args.backend == "sim" else "host-jax"
     if args.backend == "sim":
@@ -63,7 +76,10 @@ def main(argv=None):
             cluster.add_node(f"pod{p}", [slice_spec])
         gw = Gateway(SimBackend(cluster))
     else:
-        gw = Gateway(EngineBackend())
+        gw = Gateway(EngineBackend(
+            max_batch=max_batch,
+            batch_wait_s=(args.batch_wait_ms / 1e3
+                          if args.batch_wait_ms is not None else 0.002)))
 
     tok = ByteTokenizer()
     prompts = [tok.encode(t) for t in
@@ -84,8 +100,11 @@ def main(argv=None):
             # engine backend: make_serve_runtime's host-jax default profile
             acc_types = None if args.backend == "engine" else \
                 {acc_type: SimProfile(elat_median_s=0.4, cold_start_s=2.0)}
+            # the runtime's own batch cap must track the CLI flag, or the
+            # dispatcher silently clamps to make_serve_runtime's default
             rdef = make_serve_runtime(cfg, acc_types=acc_types,
-                                      max_slots=4, max_len=64)
+                                      max_slots=4, max_len=64,
+                                      max_batch=max_batch)
         rt_ids.append(gw.register(rdef))
 
     for i in range(args.events):
@@ -106,8 +125,11 @@ def main(argv=None):
             print(f"{node.name}: cold={node.n_cold_starts} "
                   f"warm={node.n_warm_starts}")
     else:
-        print(f"local: cold={gw.backend.n_cold_starts} "
-              f"warm={gw.backend.n_warm_starts}")
+        eb = gw.backend
+        sizes = eb.batch_sizes or [0]
+        print(f"local: cold={eb.n_cold_starts} warm={eb.n_warm_starts} "
+              f"batches={eb.n_batches} "
+              f"max_batch_served={max(sizes)} rejected={eb.n_rejected}")
     return 0 if ok == len(m.completed) else 1
 
 

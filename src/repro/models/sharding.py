@@ -15,7 +15,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.param import tree_map_specs, Spec
+from repro.models.param import tree_map_specs
 
 AxisRule = Union[None, str, Tuple[str, ...]]
 

@@ -10,7 +10,6 @@ ICI. MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params.
 from __future__ import annotations
 
 import dataclasses
-import json
 from typing import Dict, Optional
 
 from repro.configs.base import InputShape, ModelConfig

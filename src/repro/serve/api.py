@@ -4,6 +4,11 @@
 events are batches of generation requests — the node manager cold-starts
 the engine (jit compile + weights) on first use and reuses it while warm,
 exactly the paper's runtime-instance lifecycle, with real JAX execution.
+
+The runtime is *batchable*: ``batch_fn`` merges several compatible events'
+prompts into one shared continuous-batching stream, so a single jitted
+decode step serves every event in the micro-batch (the gateway engine
+dispatcher forms those batches; see ``gateway.backends.EngineBackend``).
 """
 from __future__ import annotations
 
@@ -20,12 +25,15 @@ from repro.serve.engine import Request, ServingEngine
 def make_serve_runtime(cfg: ModelConfig, *,
                        acc_types: Optional[Dict[str, SimProfile]] = None,
                        max_slots: int = 4, max_len: int = 128,
+                       max_batch: int = 4,
                        seed: int = 0) -> RuntimeDef:
     """RuntimeDef for serving ``cfg`` with REAL execution on this host.
 
     acc_types: accelerator type -> SimProfile (used for cold-start/result
     modeling; ELat itself is measured wall time of the actual forward).
     Defaults to the gateway engine backend's ``host-jax`` type.
+    max_batch: largest event micro-batch one engine call may serve
+    (their requests share the engine's decode slots).
     """
     if acc_types is None:
         acc_types = {HOST_ACC: SimProfile(elat_median_s=0.4, cold_start_s=2.0)}
@@ -35,18 +43,36 @@ def make_serve_runtime(cfg: ModelConfig, *,
         return ServingEngine(cfg, params, max_slots=max_slots,
                              max_len=max_len)
 
+    def _requests(data: Any, max_new: int, base_id: int) -> List[Request]:
+        prompts: List[List[int]] = data["prompts"]
+        return [Request(prompt=p, max_new_tokens=max_new, req_id=base_id + i)
+                for i, p in enumerate(prompts)]
+
     def fn(data: Any, config: Dict[str, Any]):
         engine: Optional[ServingEngine] = config.get("handle")
         if engine is None:                      # node skipped setup (sim)
             engine = setup()
-        prompts: List[List[int]] = data["prompts"]
         max_new = int(config.get("max_new_tokens", 8))
-        reqs = [Request(prompt=p, max_new_tokens=max_new, req_id=i)
-                for i, p in enumerate(prompts)]
-        done = engine.generate(reqs)
+        done = engine.generate(_requests(data, max_new, base_id=0))
         return {"outputs": [r.output for r in done],
                 "n_decode_steps": engine.n_decode_steps}
 
+    def batch_fn(datas: List[Any], config: Dict[str, Any]):
+        engine: Optional[ServingEngine] = config.get("handle")
+        if engine is None:
+            engine = setup()
+        max_new = int(config.get("max_new_tokens", 8))
+        groups, base = [], 0
+        for data in datas:
+            reqs = _requests(data, max_new, base_id=base)
+            base += len(reqs)
+            groups.append(reqs)
+        done_groups = engine.generate_many(groups)
+        return [{"outputs": [r.output for r in g],
+                 "n_decode_steps": engine.n_decode_steps}
+                for g in done_groups]
+
     return RuntimeDef(runtime_id=f"serve-{cfg.name}", profiles=acc_types,
                       fn=fn, setup=setup,
+                      batch_fn=batch_fn, max_batch=max_batch,
                       artifact_bytes=64 << 20)

@@ -13,14 +13,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.data.tokenizer import EOS, PAD
+from repro.data.tokenizer import EOS
 from repro.models import model as M
 
 
@@ -144,3 +144,28 @@ class ServingEngine:
                 self.admit(waiting.pop(0))
             done.extend(self.step())
         return done
+
+    # ------------------------------------------------------------------
+    def generate_many(self, groups: List[List[Request]]
+                      ) -> List[List[Request]]:
+        """Serve several invocations' request groups through ONE shared
+        continuous-batching stream.
+
+        All groups' requests compete for the same decode slots, so one
+        jitted decode step advances every active request regardless of
+        which invocation submitted it — this is what the gateway engine
+        dispatcher calls when it micro-batches compatible events.  Returns
+        finished requests regrouped per input group (completion order
+        within each group, like :meth:`generate`).
+        """
+        owner: Dict[int, int] = {}
+        merged: List[Request] = []
+        for gi, group in enumerate(groups):
+            for req in group:
+                owner[id(req)] = gi
+                merged.append(req)
+        done = self.generate(merged)
+        out: List[List[Request]] = [[] for _ in groups]
+        for req in done:
+            out[owner[id(req)]].append(req)
+        return out

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import io
 import json
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import numpy as np

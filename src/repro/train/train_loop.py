@@ -8,7 +8,7 @@ serves the dry-run (``.lower()`` on ShapeDtypeStructs) and real training
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +17,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models import sharding as S
-from repro.models.param import abstract_params, axes_tree
 from repro.train.optimizer import AdamWConfig, AdamWState, adamw_update, init_opt_state
 
 

@@ -1,5 +1,4 @@
 """Cluster simulation behaviour: the paper's experiment mechanics."""
-import pytest
 
 from repro.core import paper_testbed, PhaseWorkload, Phase, paper_phases
 from repro.core.cluster import Cluster, GPU_K600, VPU_NCS, tinyyolo_runtime

@@ -1,0 +1,272 @@
+"""Concurrent batched EngineBackend: micro-batch formation, pad-to-bucket
+shapes, max-wait deadlines, per-key serialization, multi-worker overlap,
+bounded-queue backpressure, and per-event waits."""
+import threading
+import time
+
+import pytest
+
+from repro.core.runtime import RuntimeDef, SimProfile, run_batch
+from repro.gateway import (EngineBackend, Gateway, InvocationRejected)
+
+WAIT = 0.25          # generous batch window so tests are deterministic
+
+
+def counting_batch_runtime(rid="batchy", max_batch=4, buckets=None):
+    """Batchable runtime that records every batch_fn call's padded size."""
+    calls = []
+
+    def setup():
+        return {"ready": True}
+
+    def batch_fn(datas, config):
+        assert config["handle"]["ready"]
+        calls.append((len(datas), config["n_real"]))
+        return [{"x": d, "batch": len(datas)} for d in datas]
+
+    rdef = RuntimeDef(runtime_id=rid,
+                      profiles={"host-jax": SimProfile(elat_median_s=0.01)},
+                      batch_fn=batch_fn, max_batch=max_batch,
+                      batch_buckets=buckets, setup=setup)
+    return rdef, calls
+
+
+def blocking_runtime(rid):
+    """fn blocks on an event so tests can hold an invocation in-flight."""
+    started = threading.Event()
+    release = threading.Event()
+
+    def fn(data, config):
+        started.set()
+        assert release.wait(timeout=10.0), "test never released the runtime"
+        return {"ok": True}
+
+    rdef = RuntimeDef(runtime_id=rid,
+                      profiles={"host-jax": SimProfile(elat_median_s=0.01)},
+                      fn=fn)
+    return rdef, started, release
+
+
+# ------------------------------------------------------------- batching
+def test_compatible_events_form_micro_batches():
+    rdef, calls = counting_batch_runtime(max_batch=4)
+    eb = EngineBackend(n_workers=1, max_batch=4, batch_wait_s=WAIT)
+    gw = Gateway(eb)
+    gw.register(rdef)
+    futs = gw.map("batchy", [b"a", b"b", b"c", b"d", b"e", b"f", b"g", b"h"])
+    results = gw.gather(futs)
+    assert len(results) == 8 and all(r["x"] for r in results)
+    # 8 same-key events over max_batch=4 -> at most 3 dispatches (the first
+    # may race ahead of the remaining submits, but never one-by-one)
+    assert eb.n_batches <= 3
+    assert sum(n for n, _ in calls) >= 8
+    assert max(eb.batch_sizes) >= 2
+
+
+def test_batch_respects_runtime_max_batch_over_backend_max():
+    rdef, calls = counting_batch_runtime(max_batch=2)
+    eb = EngineBackend(n_workers=1, max_batch=8, batch_wait_s=WAIT)
+    gw = Gateway(eb)
+    gw.register(rdef)
+    gw.map("batchy", [b"a", b"b", b"c", b"d"])
+    gw.drain()
+    assert all(n <= 2 for n, _ in calls)
+
+
+def test_pad_to_bucket_shapes_and_truncated_results():
+    rdef, calls = counting_batch_runtime(max_batch=8, buckets=(1, 2, 4, 8))
+    eb = EngineBackend(n_workers=1, max_batch=8, batch_wait_s=WAIT)
+    gw = Gateway(eb)
+    gw.register(rdef)
+    futs = gw.map("batchy", [b"a", b"b", b"c"])   # 3 real -> padded to 4
+    results = gw.gather(futs)
+    assert len(results) == 3                       # pad results discarded
+    padded_sizes = [n for n, n_real in calls if n_real == 3]
+    assert padded_sizes == [4]
+    assert [r["x"] for r in results] == [b"a", b"b", b"c"]
+
+
+def test_incompatible_configs_never_share_a_batch():
+    rdef, calls = counting_batch_runtime(max_batch=8)
+    eb = EngineBackend(n_workers=1, max_batch=8, batch_wait_s=WAIT)
+    gw = Gateway(eb)
+    gw.register(rdef)
+    for m in ("a", "b", "a", "b"):
+        gw.invoke("batchy", b"x", config={"model": m})
+    gw.drain()
+    # two runtime_keys -> at least two dispatches, none mixing configs
+    assert eb.n_batches >= 2
+    assert all(n <= 2 for n, _ in calls)
+
+
+def test_partial_batch_dispatches_at_max_wait_deadline():
+    rdef, calls = counting_batch_runtime(max_batch=8)
+    eb = EngineBackend(n_workers=1, max_batch=8, batch_wait_s=0.05)
+    gw = Gateway(eb)
+    gw.register(rdef)
+    fut = gw.invoke("batchy", b"lonely")
+    out = fut.result(extra_time_s=10.0)
+    assert out["x"] == b"lonely"
+    assert calls[0][1] == 1        # served as a partial batch of one
+
+
+def test_run_batch_falls_back_to_fn_when_not_batchable():
+    rdef = RuntimeDef(runtime_id="plain",
+                      profiles={"host-jax": SimProfile(elat_median_s=0.01)},
+                      fn=lambda d, c: {"v": d})
+    out = run_batch(rdef, [1, 2, 3], {})
+    assert [o["v"] for o in out] == [1, 2, 3]
+
+
+# ----------------------------------------------------------- concurrency
+def test_distinct_keys_execute_concurrently_on_two_workers():
+    ra, started_a, release_a = blocking_runtime("ra")
+    rb, started_b, release_b = blocking_runtime("rb")
+    eb = EngineBackend(n_workers=2, batch_wait_s=0.0)
+    gw = Gateway(eb)
+    gw.register(ra)
+    gw.register(rb)
+    fa = gw.invoke("ra")
+    fb = gw.invoke("rb")
+    # both runtimes are mid-fn at once -> true overlap, not FIFO
+    assert started_a.wait(timeout=5.0) and started_b.wait(timeout=5.0)
+    assert not fa.done() and not fb.done()
+    release_a.set()
+    release_b.set()
+    assert gw.gather([fa, fb]) == [{"ok": True}, {"ok": True}]
+    assert {fa.invocation.node, fb.invocation.node} == \
+        {"local/w0", "local/w1"}
+
+
+def test_same_key_is_serialized_even_with_spare_workers():
+    rdef, started, release = blocking_runtime("solo")
+    eb = EngineBackend(n_workers=2, batch_wait_s=0.0)
+    gw = Gateway(eb)
+    gw.register(rdef)
+    f1 = gw.invoke("solo")
+    f2 = gw.invoke("solo")
+    assert started.wait(timeout=5.0)
+    time.sleep(0.05)                  # give a second worker every chance
+    assert not f2.done()              # one warm instance => one at a time
+    release.set()
+    gw.gather([f1, f2])
+    assert f1.invocation.success and f2.invocation.success
+
+
+def test_per_event_wait_does_not_require_full_drain():
+    rdef, started, release = blocking_runtime("slowkey")
+    fast = RuntimeDef(runtime_id="fastkey",
+                      profiles={"host-jax": SimProfile(elat_median_s=0.01)},
+                      fn=lambda d, c: {"fast": True})
+    eb = EngineBackend(n_workers=2, batch_wait_s=0.0)
+    gw = Gateway(eb)
+    gw.register(rdef)
+    gw.register(fast)
+    f_slow = gw.invoke("slowkey")
+    f_fast = gw.invoke("fastkey")
+    assert started.wait(timeout=5.0)
+    # resolves while the other key is still blocked inside its fn
+    assert f_fast.result(extra_time_s=10.0) == {"fast": True}
+    assert not f_slow.done()
+    assert gw.backlog() == 1
+    release.set()
+    gw.drain()
+    assert f_slow.invocation.success and gw.backlog() == 0
+
+
+# ---------------------------------------------------------- backpressure
+def test_bounded_queue_sheds_and_surfaces_through_future():
+    rdef, started, release = blocking_runtime("busy")
+    eb = EngineBackend(n_workers=1, max_queue=2, batch_wait_s=0.0)
+    gw = Gateway(eb)
+    gw.register(rdef)
+    f1 = gw.invoke("busy")                 # in-flight (blocks)
+    f2 = gw.invoke("busy")                 # pending
+    assert started.wait(timeout=5.0)
+    f3 = gw.invoke("busy")                 # over budget -> shed
+    assert f3.rejected() and f3.done() and not f3.invocation.success
+    assert f3.poll()                       # failure record is persisted
+    assert "backpressure" in f3.invocation.error
+    with pytest.raises(InvocationRejected):
+        f3.result()
+    release.set()
+    gw.drain()
+    assert f1.invocation.success and f2.invocation.success
+    assert eb.n_rejected == 1
+    rec = gw.backend.store.get(f3.invocation.result_ref)
+    assert rec["success"] is False
+
+
+def test_batch_fn_failure_fails_every_event_in_the_batch():
+    def bad_batch(datas, config):
+        raise RuntimeError("batch exploded")
+
+    rdef = RuntimeDef(runtime_id="badbatch",
+                      profiles={"host-jax": SimProfile(elat_median_s=0.01)},
+                      batch_fn=bad_batch, max_batch=4)
+    eb = EngineBackend(n_workers=1, max_batch=4, batch_wait_s=WAIT)
+    gw = Gateway(eb)
+    gw.register(rdef)
+    futs = gw.map("badbatch", [b"a", b"b", b"c"])
+    gw.drain()
+    assert all(f.done() and not f.invocation.success for f in futs)
+    assert all("batch exploded" in f.invocation.error for f in futs)
+    assert all(f.invocation.check_monotone() for f in futs)
+
+
+def test_submit_after_shutdown_rejects_instead_of_stranding():
+    rdef = RuntimeDef(runtime_id="late",
+                      profiles={"host-jax": SimProfile(elat_median_s=0.01)},
+                      fn=lambda d, c: {"ok": True})
+    eb = EngineBackend(n_workers=1)
+    gw = Gateway(eb)
+    gw.register(rdef)
+    gw.invoke("late").result(extra_time_s=10.0)
+    eb.shutdown()
+    fut = gw.invoke("late")                 # no worker will ever serve this
+    assert fut.done() and fut.rejected()
+    assert "shut down" in fut.invocation.error
+    with pytest.raises(InvocationRejected):
+        fut.result()
+    assert gw.backlog() == 0                # nothing stranded
+
+
+def test_unserializable_result_fails_event_without_killing_worker():
+    """A result the object store cannot pickle must settle as a failed
+    event — and the worker must survive to serve the next one."""
+    rdef = RuntimeDef(runtime_id="locky",
+                      profiles={"host-jax": SimProfile(elat_median_s=0.01)},
+                      fn=lambda d, c: {"oops": threading.Lock()})
+    ok = RuntimeDef(runtime_id="fine",
+                    profiles={"host-jax": SimProfile(elat_median_s=0.01)},
+                    fn=lambda d, c: {"ok": True})
+    eb = EngineBackend(n_workers=1, batch_wait_s=0.0)
+    gw = Gateway(eb)
+    gw.register(rdef)
+    gw.register(ok)
+    f_bad = gw.invoke("locky")
+    f_ok = gw.invoke("fine")
+    gw.drain(extra_time_s=10.0)
+    assert f_bad.done() and not f_bad.invocation.success
+    assert "persist failed" in f_bad.invocation.error
+    assert f_ok.invocation.success          # the worker lived on
+    assert gw.backlog() == 0
+
+
+def test_metrics_consistent_under_concurrent_settlement():
+    rdef, calls = counting_batch_runtime(max_batch=4)
+    other = RuntimeDef(runtime_id="other",
+                       profiles={"host-jax": SimProfile(elat_median_s=0.01)},
+                       fn=lambda d, c: {"ok": True})
+    eb = EngineBackend(n_workers=2, max_batch=4, batch_wait_s=0.01)
+    gw = Gateway(eb)
+    gw.register(rdef)
+    gw.register(other)
+    futs = []
+    for i in range(10):
+        futs.append(gw.invoke("batchy" if i % 2 else "other", b"p"))
+    gw.drain()
+    assert len(gw.metrics.completed) == 10
+    assert gw.metrics.r_success() == 10
+    assert all(i.check_monotone() for i in gw.metrics.completed)
+    eb.shutdown()

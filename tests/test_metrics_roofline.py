@@ -1,5 +1,4 @@
 """Metrics derivations + roofline HLO collective parsing."""
-import numpy as np
 
 from repro.core.events import Invocation
 from repro.core.metrics import MetricsCollector

@@ -1,5 +1,4 @@
 """Unit/property tests for model building blocks."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +12,7 @@ from repro.configs import get_config, list_archs
 from repro.configs.base import SHAPES, input_specs
 from repro.models import model as M
 from repro.models.layers import cross_entropy, rms_norm, rope
-from repro.models.param import abstract_params, init_params, param_bytes
+from repro.models.param import abstract_params
 from repro.models.sharding import spec_for
 
 rng = np.random.default_rng(0)

@@ -1,7 +1,6 @@
 """End-to-end behaviour: the Hardless control plane executing REAL JAX
 model serving as runtime instances (cold start = jit + weights), plus
 metrics plumbing."""
-import jax
 
 from repro.configs import get_config
 from repro.core.cluster import Cluster

@@ -3,7 +3,6 @@ DESIGN (embeddings consumed by the backbone; loss/logits on token positions
 only)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.models import model as M
