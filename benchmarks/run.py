@@ -110,6 +110,23 @@ def _sec_gateway() -> Dict[str, Any]:
     return g
 
 
+def _sec_workflow() -> Dict[str, Any]:
+    # --- workflow composition: sim DAGs + live engine chains ------------
+    from benchmarks.bench_workflow import bench as wf_bench
+    t0 = time.perf_counter()
+    w = wf_bench(real=True)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(w), 1)
+    s = w["sim/pipeline"]
+    _row("workflow_sim_pipeline", us,
+         f"steps={s['n_steps']} makespan={s['makespan_s']:.2f}s "
+         f"steps_per_s={s['steps_per_s']:.2f}")
+    e = w["engine/chains"]
+    _row("workflow_engine_chains", us,
+         f"steps={e['n_steps']} mean_batch={e['mean_batch']:.1f} "
+         f"steps_per_s={e['steps_per_s']:.2f}")
+    return w
+
+
 def _sec_serving() -> Dict[str, Any]:
     # --- serving engine (real JAX execution) ----------------------------
     from benchmarks.bench_serving import bench as serving_bench
@@ -145,6 +162,7 @@ SECTIONS: List[Tuple[str, Callable[[], Dict[str, Any]]]] = [
     ("scheduler", _sec_scheduler),
     ("elasticity", _sec_elasticity),
     ("gateway", _sec_gateway),
+    ("workflow", _sec_workflow),
     ("serving", _sec_serving),
     ("roofline", _sec_roofline),
 ]
@@ -153,15 +171,17 @@ SECTIONS: List[Tuple[str, Callable[[], Dict[str, Any]]]] = [
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="run only sections whose name contains this "
-                         f"substring (of: {[n for n, _ in SECTIONS]})")
+                    help="run only sections whose name contains one of "
+                         "these comma-separated substrings "
+                         f"(of: {[n for n, _ in SECTIONS]})")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + per-section raw results as "
                          "JSON (e.g. BENCH_gateway.json)")
     args = ap.parse_args(argv)
 
+    tokens = args.only.split(",") if args.only else None
     picked = [(n, f) for n, f in SECTIONS
-              if args.only is None or args.only in n]
+              if tokens is None or any(t and t in n for t in tokens)]
     if not picked:
         ap.error(f"--only {args.only!r} matches no section "
                  f"(have: {[n for n, _ in SECTIONS]})")

@@ -4,6 +4,9 @@ Reproduces claims C1 (extra accelerator raises max RFast without user
 intervention), C2 (per-accelerator ELat medians) and C3 (higher max RLat
 with heterogeneity, as deep-backlog events complete instead of timing out).
 
+Backend exercised: sim (paper_testbed on the virtual clock; calibrated
+service times, no hardware).
+
     PYTHONPATH=src python examples/heterogeneous_accelerators.py
 """
 from repro.core import PhaseWorkload, paper_phases, paper_testbed

@@ -1,6 +1,10 @@
 """Quickstart: stand up the paper's testbed, submit a phase workload, read
 the paper's metrics back.
 
+Backend exercised: sim (the discrete-event cluster on the virtual clock,
+driven directly — no hardware, deterministic; CI's examples-smoke job
+runs this file).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 from repro.core import PhaseWorkload, paper_phases, paper_testbed

@@ -6,6 +6,9 @@ requests; node managers cold-start engines (jit compile + weights) on first
 use, reuse them while warm, and persist results to object storage — the
 full Hardless §IV lifecycle with actual model execution on this host.
 
+Backend exercised: sim (pod cluster on the virtual clock) with REAL
+reduced-config JAX forwards inside each simulated node.
+
     PYTHONPATH=src python examples/serve_cluster.py
 """
 

@@ -2,6 +2,9 @@
 pipeline -> sharded train step (1-device CPU mesh here; the same factory
 drives the 256-chip dry-run) -> checkpoints into the Hardless object store.
 
+Backend exercised: none — this drives the training substrate directly
+(real JAX on this host); only checkpoints touch the object store.
+
     PYTHONPATH=src python examples/train_100m.py --steps 200
 (defaults target "a few hundred steps"; use --steps 20 for a quick look)
 """

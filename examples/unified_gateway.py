@@ -2,6 +2,9 @@
 against the calibrated cluster simulation and against real JAX execution
 on this host — only the backend handed to the Gateway changes.
 
+Backends exercised: BOTH — sim (roofline service times, virtual clock)
+then engine (real reduced-config execution on this host's JAX devices).
+
     PYTHONPATH=src python examples/unified_gateway.py
 """
 from repro.configs import get_config

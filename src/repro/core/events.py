@@ -17,6 +17,9 @@ _ids = itertools.count()
 
 @dataclasses.dataclass
 class Invocation:
+    """One Hardless event: *(runtime reference, data-set reference, run
+    configuration)* plus the §V-A timestamp chain and outcome record."""
+
     runtime_id: str                 # runtime reference (the "workload")
     data_ref: str                   # object-store key of the input data
     config: Dict[str, Any] = dataclasses.field(default_factory=dict)
@@ -39,6 +42,13 @@ class Invocation:
     error: Optional[str] = None
     rejected: bool = False              # shed at admission (backpressure)
 
+    # --- workflow provenance (None for standalone events) ---
+    # set by the workflow runner so metrics/traces can group the events of
+    # one composed submission; deliberately NOT part of runtime_key, so
+    # steps from different workflows still share warm instances and batches
+    workflow: Optional[str] = None      # owning Workflow's name
+    step: Optional[str] = None          # step name inside that workflow
+
     # ------------------------------------------------------------------
     @property
     def runtime_key(self) -> str:
@@ -50,17 +60,21 @@ class Invocation:
 
     @property
     def rlat(self) -> Optional[float]:
+        """Request latency: client submit to client result (REnd - RStart)."""
         return None if self.r_end is None else self.r_end - self.r_start
 
     @property
     def elat(self) -> Optional[float]:
+        """Execution latency inside the runtime (EEnd - EStart)."""
         return None if self.e_end is None else self.e_end - self.e_start
 
     @property
     def dlat(self) -> Optional[float]:
+        """Delivery latency: submit to execution start (EStart - RStart)."""
         return None if self.e_start is None else self.e_start - self.r_start
 
     def check_monotone(self) -> bool:
+        """True when every reached timestamp respects the §V-A ordering."""
         ts = [self.r_start, self.n_start, self.e_start, self.e_end,
               self.n_end, self.r_end]
         seen = [t for t in ts if t is not None]

@@ -36,11 +36,21 @@ class SimProfile:
     result_bytes: int = 65536
 
     def sample_elat(self, rng: random.Random) -> float:
+        """Draw one service time (seconds) from the lognormal model."""
         return self.elat_median_s * math.exp(rng.gauss(0.0, self.sigma))
 
 
 @dataclasses.dataclass
 class RuntimeDef:
+    """A platform-owned runtime environment (§IV-A).
+
+    Declares which accelerator types can serve it (``profiles``), the
+    real-execution entry points for this host (``fn``/``setup``), and the
+    micro-batching contract (``batch_fn``/``max_batch``/``batch_buckets``)
+    the engine dispatcher uses to serve several compatible events with one
+    call.  Users only ever reference ``runtime_id``.
+    """
+
     runtime_id: str                  # e.g. "onnx-tinyyolov2", "serve-qwen2.5-14b"
     # accelerator type -> performance profile (None profile = unsupported)
     profiles: Dict[str, SimProfile]
@@ -64,6 +74,7 @@ class RuntimeDef:
     batch_buckets: Optional[Tuple[int, ...]] = None
 
     def supports(self, acc_type: str) -> bool:
+        """True when accelerator type ``acc_type`` can serve this runtime."""
         return acc_type in self.profiles
 
     @property
@@ -74,6 +85,7 @@ class RuntimeDef:
 
     @property
     def is_batchable(self) -> bool:
+        """True when one call may serve a micro-batch of several events."""
         return self.batch_fn is not None and self.max_batch > 1
 
     def batch_limit(self, backend_max: int) -> int:
@@ -121,17 +133,21 @@ class RuntimeRegistry:
         self._defs: Dict[str, RuntimeDef] = {}
 
     def register(self, rdef: RuntimeDef) -> None:
+        """Add (or replace) a runtime definition under its id."""
         self._defs[rdef.runtime_id] = rdef
 
     def ids(self):
+        """All registered runtime ids, in registration order."""
         return list(self._defs)
 
     def get(self, runtime_id: str) -> RuntimeDef:
+        """The definition for ``runtime_id`` (KeyError when unknown)."""
         return self._defs[runtime_id]
 
     def __contains__(self, runtime_id: str) -> bool:
         return runtime_id in self._defs
 
     def supported_on(self, acc_types) -> set:
+        """Ids of runtimes servable by at least one of ``acc_types``."""
         return {rid for rid, rd in self._defs.items()
                 if any(rd.supports(t) for t in acc_types)}

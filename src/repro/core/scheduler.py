@@ -18,6 +18,8 @@ if TYPE_CHECKING:
 
 
 class Scheduler:
+    """Base event-selection policy (the node's queue-scan strategy)."""
+
     name = "base"
     # the paper's "query for a same-configuration event on completion" —
     # part of the Hardless queue protocol; the naive FIFO baseline lacks it
@@ -25,6 +27,7 @@ class Scheduler:
 
     def pick(self, queue: ScannableQueue, node: "NodeManager",
              now: float) -> Optional[Tuple[Invocation, Accelerator]]:
+        """Take one (event, accelerator) pair to run, or None to idle."""
         raise NotImplementedError
 
     # shared helper: accelerators with capacity that support the runtime
@@ -42,6 +45,7 @@ class FifoScheduler(Scheduler):
     reuse_on_complete = False
 
     def pick(self, queue, node, now):
+        """Oldest runnable event on the first accelerator that fits."""
         for inv in queue.scan():
             if inv.runtime_id not in node.registry:
                 continue
@@ -58,6 +62,7 @@ class WarmAffinityScheduler(Scheduler):
     name = "warm"
 
     def pick(self, queue, node, now):
+        """Prefer events warm on this node, else the oldest runnable."""
         # pass 1: warm match
         for inv in queue.scan():
             if inv.runtime_id not in node.registry:
@@ -84,6 +89,7 @@ class CostAwareScheduler(Scheduler):
     name = "cost"
 
     def pick(self, queue, node, now):
+        """Cheapest expected accelerator-seconds over all (event, acc)."""
         best = None
         for inv in queue.scan():
             if inv.runtime_id not in node.registry:
@@ -110,4 +116,5 @@ POLICIES = {c.name: c for c in
 
 
 def make_scheduler(name: str) -> Scheduler:
+    """Instantiate a policy by name (``fifo`` / ``warm`` / ``cost``)."""
     return POLICIES[name]()

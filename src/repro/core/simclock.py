@@ -43,6 +43,21 @@ class SimClock:
         if until is not None and until > self._now:
             self._now = until
 
+    def step(self) -> bool:
+        """Process the single earliest scheduled event; False when idle.
+
+        The workflow runner's fine-grained drive primitive: advance virtual
+        time just far enough to observe a completion, so dependent steps can
+        be submitted *at* the moment their inputs appear rather than after a
+        whole-horizon drain.
+        """
+        if not self._heap:
+            return False
+        t, _, fn = heapq.heappop(self._heap)
+        self._now = t
+        fn()
+        return True
+
     @property
     def pending(self) -> int:
         return len(self._heap)

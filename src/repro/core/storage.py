@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import hashlib
 import pickle
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Sequence
 
 
 class ObjectStore:
@@ -45,6 +45,16 @@ class ObjectStore:
 
     def size(self, key: str) -> int:
         return len(self._blobs[key])
+
+    def gather(self, refs: Sequence[str], key: Optional[str] = None) -> str:
+        """Fan-in barrier on the data plane: materialize the objects under
+        ``refs`` (in order) as ONE stored list and return its ref.
+
+        Used by the workflow runner when a step has several parents — the
+        child runtime fetches a single combined data set instead of the
+        client shuttling intermediate results around.
+        """
+        return self.put([self.get(r) for r in refs], key=key)
 
     # -- outcome records -------------------------------------------------
     def persist_outcome(self, inv, result: Any,

@@ -21,7 +21,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import OrderedDict, deque
-from typing import Any, Deque, List, Optional
+from typing import Any, Deque, List, Optional, Sequence
 
 from repro.core.cluster import Cluster
 from repro.core.events import Invocation
@@ -37,11 +37,18 @@ class Backend:
     store: ObjectStore
     registry: RuntimeRegistry
     metrics: MetricsCollector
+    # True when submitted work makes progress without the client driving it
+    # (the engine's worker threads); False when progress requires the client
+    # to advance a clock (the sim).  The workflow runner uses this to decide
+    # between a background driver thread and pull-driven stepping.
+    autonomous = False
 
     def register(self, rdef: RuntimeDef) -> None:
+        """Publish ``rdef`` into this backend's runtime catalogue."""
         raise NotImplementedError
 
     def submit(self, inv: Invocation) -> None:
+        """Accept one event for execution (asynchronous; returns at once)."""
         raise NotImplementedError
 
     def drain(self, extra_time_s: float = 600.0) -> None:
@@ -49,10 +56,22 @@ class Backend:
         raise NotImplementedError
 
     def now(self) -> float:
+        """Current time on this backend's clock (virtual or wall seconds)."""
         raise NotImplementedError
 
     def backlog(self) -> int:
         """Submitted-but-unsettled event count (0 when fully drained)."""
+        raise NotImplementedError
+
+    def wait_any(self, invs: Sequence[Invocation],
+                 timeout_s: float = 600.0) -> bool:
+        """Block until at least one of ``invs`` settles (r_end set).
+
+        Returns False when the wait cannot make progress within
+        ``timeout_s`` — wall seconds on an autonomous backend, virtual
+        seconds on the sim.  The workflow runner's "a dependency just
+        resolved" primitive.
+        """
         raise NotImplementedError
 
 
@@ -69,20 +88,40 @@ class SimBackend(Backend):
         self._n_submitted = 0
 
     def register(self, rdef: RuntimeDef) -> None:
+        """Publish ``rdef`` into the cluster's registry + object store."""
         self.cluster.register_runtime(rdef)
 
     def submit(self, inv: Invocation) -> None:
+        """Schedule the event's publication at its RStart on the sim clock."""
         self._n_submitted += 1
         self.cluster.submit(inv)
 
     def drain(self, extra_time_s: float = 600.0) -> None:
+        """Run the clock far enough past the last RStart for all to finish."""
         self.cluster.drain(extra_time_s=extra_time_s)
 
     def now(self) -> float:
+        """Current virtual time."""
         return self.cluster.clock.now()
 
     def backlog(self) -> int:
+        """Submitted events whose completion has not been recorded yet."""
         return self._n_submitted - len(self.metrics.completed)
+
+    def wait_any(self, invs: Sequence[Invocation],
+                 timeout_s: float = 600.0) -> bool:
+        """Advance the virtual clock event-by-event until one of ``invs``
+        settles.  ``timeout_s`` bounds the *virtual* time advanced (periodic
+        timers such as the autoscaler tick keep the heap non-empty forever,
+        so an unbounded step loop would spin).  False = nothing settled —
+        either the bound was hit or the event heap drained, meaning the
+        events can never complete (e.g. no node supports the runtime)."""
+        clock = self.cluster.clock
+        bound = clock.now() + timeout_s
+        while not any(i.r_end is not None for i in invs):
+            if clock.now() > bound or not clock.step():
+                return False
+        return True
 
 
 class _KeyQueue:
@@ -124,6 +163,7 @@ class EngineBackend(Backend):
     """
 
     name = "engine"
+    autonomous = True       # worker threads progress without client driving
 
     def __init__(self, *, max_warm: int = 4, accelerator: str = HOST_ACC,
                  n_workers: Optional[int] = None, max_batch: int = 8,
@@ -184,10 +224,12 @@ class EngineBackend(Backend):
             t.join(timeout=5.0)
 
     def now(self) -> float:
+        """Wall seconds since this backend was constructed."""
         return time.monotonic() - self._t0
 
     # -- catalogue -------------------------------------------------------
     def register(self, rdef: RuntimeDef) -> None:
+        """Publish a *real* runtime (must have ``fn``/``batch_fn``)."""
         if not rdef.is_real:
             raise ValueError(
                 f"runtime {rdef.runtime_id!r} has no real fn/batch_fn — the "
@@ -199,6 +241,7 @@ class EngineBackend(Backend):
 
     # -- admission (bounded; sheds on overload) --------------------------
     def submit(self, inv: Invocation) -> None:
+        """Enqueue one event (sheds it as ``rejected`` over ``max_queue``)."""
         if inv.runtime_id not in self.registry:
             raise KeyError(f"unknown runtime {inv.runtime_id!r}")
         inv.r_start = self.now() if inv.r_start is None else inv.r_start
@@ -241,10 +284,12 @@ class EngineBackend(Backend):
 
     # -- completion waits ------------------------------------------------
     def backlog(self) -> int:
+        """Pending + in-flight event count (the backpressure signal)."""
         with self._lock:
             return self._n_pending + self._n_inflight
 
     def drain(self, extra_time_s: float = 600.0) -> None:
+        """Block until the dispatcher is idle (or ``extra_time_s`` elapses)."""
         deadline = time.monotonic() + extra_time_s
         with self._lock:
             while self._n_pending or self._n_inflight:
@@ -263,6 +308,20 @@ class EngineBackend(Backend):
                     break
                 self._settled.wait(timeout=min(remaining, 0.25))
         return inv.r_end is not None
+
+    def wait_any(self, invs: Sequence[Invocation],
+                 timeout_s: float = 600.0) -> bool:
+        """Block until at least one of ``invs`` settles (workers progress
+        in the background); False when ``timeout_s`` wall seconds elapse
+        first."""
+        deadline = time.monotonic() + timeout_s
+        with self._lock:
+            while not any(i.r_end is not None for i in invs):
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._settled.wait(timeout=min(remaining, 0.25))
+        return True
 
     # -- dispatcher ------------------------------------------------------
     def _ready_locked(self, key: str, kq: _KeyQueue, now: float) -> bool:
@@ -434,9 +493,11 @@ class EngineBackend(Backend):
 
     # -- warm-pool introspection ----------------------------------------
     def warm_keys(self) -> List[str]:
+        """Runtime keys with a live warm instance, LRU-oldest first."""
         with self._lock:
             return list(self._handles)
 
     def handle(self, runtime_key: str) -> Any:
+        """The warm ``setup()`` handle for ``runtime_key`` (None if cold)."""
         with self._lock:
             return self._handles.get(runtime_key)

@@ -29,6 +29,8 @@ class InvocationRejected(InvocationError):
 
 
 class InvocationFuture:
+    """Async handle for one submitted event (returned by ``invoke()``)."""
+
     def __init__(self, inv: Invocation, backend):
         self.invocation = inv
         self._backend = backend
@@ -36,9 +38,11 @@ class InvocationFuture:
     # -- inspection ----------------------------------------------------
     @property
     def inv_id(self) -> int:
+        """The underlying invocation's id (result key ``result:inv<id>``)."""
         return self.invocation.inv_id
 
     def done(self) -> bool:
+        """True once the invocation settled (successfully or not)."""
         return self.invocation.r_end is not None
 
     def rejected(self) -> bool:
@@ -53,10 +57,12 @@ class InvocationFuture:
 
     @property
     def elat(self) -> Optional[float]:
+        """Execution latency of the settled event (None while in flight)."""
         return self.invocation.elat
 
     @property
     def rlat(self) -> Optional[float]:
+        """Request latency of the settled event (None while in flight)."""
         return self.invocation.rlat
 
     # -- blocking wait -------------------------------------------------

@@ -25,16 +25,21 @@ from repro.gateway.future import InvocationFuture
 
 
 class Gateway:
+    """The serverless front door: one client API over any backend."""
+
     def __init__(self, backend: Backend):
         self.backend = backend
         self.futures: List[InvocationFuture] = []
+        self._runner = None     # lazy WorkflowRunner (submit_workflow)
 
     # -- catalogue ------------------------------------------------------
     def register(self, rdef: RuntimeDef) -> str:
+        """Publish a runtime into the backend catalogue; returns its id."""
         self.backend.register(rdef)
         return rdef.runtime_id
 
     def runtimes(self) -> List[str]:
+        """Ids of every registered runtime."""
         return self.backend.registry.ids()
 
     # -- data plane -----------------------------------------------------
@@ -46,7 +51,9 @@ class Gateway:
     def invoke(self, runtime_id: str, payload: Any = None, *,
                data_ref: Optional[str] = None,
                config: Optional[Dict[str, Any]] = None,
-               at: Optional[float] = None) -> InvocationFuture:
+               at: Optional[float] = None,
+               workflow: Optional[str] = None,
+               step: Optional[str] = None) -> InvocationFuture:
         """Submit one event; returns immediately with a future.
 
         ``payload`` is staged to the object store (the stateless-workload
@@ -59,7 +66,8 @@ class Gateway:
         recorded timestamps, not wall-clock delay.  Under backpressure the
         engine backend may shed the event at admission — the returned
         future then reports ``rejected()`` and ``result()`` raises
-        :class:`InvocationRejected`.
+        :class:`InvocationRejected`.  ``workflow``/``step`` tag the event
+        with its composition provenance (set by the workflow runner).
         """
         if payload is not None and data_ref is not None:
             raise ValueError("pass either payload or data_ref, not both")
@@ -69,7 +77,8 @@ class Gateway:
         if data_ref is None:
             data_ref = self.put(payload) if payload is not None else ""
         inv = Invocation(runtime_id=runtime_id, data_ref=data_ref,
-                         config=dict(config or {}), r_start=at)
+                         config=dict(config or {}), r_start=at,
+                         workflow=workflow, step=step)
         self.backend.submit(inv)
         fut = InvocationFuture(inv, self.backend)
         self.futures.append(fut)
@@ -94,6 +103,21 @@ class Gateway:
                                     at=t))
         return futs
 
+    # -- composition ----------------------------------------------------
+    def submit_workflow(self, wf) -> "WorkflowFuture":  # noqa: F821
+        """Submit a :class:`~repro.gateway.workflow.Workflow` DAG as one
+        composed application; returns a ``WorkflowFuture``.
+
+        Steps are submitted the moment their dependencies resolve, with
+        intermediate results flowing node-to-node through the object
+        store; ``result()`` raises ``WorkflowStepError`` naming the
+        failing step.  See ``docs/workflows.md``.
+        """
+        from repro.gateway.workflow import WorkflowRunner
+        if self._runner is None:
+            self._runner = WorkflowRunner(self)
+        return self._runner.submit(wf)
+
     # -- completion -----------------------------------------------------
     def drain(self, extra_time_s: float = 600.0) -> None:
         """Drive the backend until all submitted invocations settle."""
@@ -109,6 +133,7 @@ class Gateway:
     # -- observability --------------------------------------------------
     @property
     def metrics(self):
+        """The backend's §V-A MetricsCollector (RLat/ELat/RFast...)."""
         return self.backend.metrics
 
     def backlog(self) -> int:
@@ -117,4 +142,5 @@ class Gateway:
         return self.backend.backlog()
 
     def summary(self) -> Dict[str, float]:
+        """The backend's aggregate metric summary (§V-A derived numbers)."""
         return self.backend.metrics.summary()

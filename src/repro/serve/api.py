@@ -43,8 +43,19 @@ def make_serve_runtime(cfg: ModelConfig, *,
         return ServingEngine(cfg, params, max_slots=max_slots,
                              max_len=max_len)
 
+    def _prompts(data: Any) -> List[List[int]]:
+        # {"prompts": [...]} is the client form; {"outputs": [...]} is a
+        # chained upstream serve step's stored result (its generations
+        # become this step's prompts); a list is a workflow fan-in gather
+        # (parent records in declared order, prompts concatenated) — this
+        # is what makes serve runtimes composable in a Workflow without
+        # any client-side adapter.
+        if isinstance(data, list):
+            return [p for d in data for p in _prompts(d)]
+        return data["prompts"] if "prompts" in data else data["outputs"]
+
     def _requests(data: Any, max_new: int, base_id: int) -> List[Request]:
-        prompts: List[List[int]] = data["prompts"]
+        prompts = [list(p) or [0] for p in _prompts(data)]
         return [Request(prompt=p, max_new_tokens=max_new, req_id=base_id + i)
                 for i, p in enumerate(prompts)]
 

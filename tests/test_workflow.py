@@ -1,0 +1,293 @@
+"""Workflow composition layer: chained / fan-out / fan-in DAGs over both
+backends, object-store data plane between steps, per-step retry policy,
+and failure propagation (failing step named, downstream cancelled, engine
+dispatcher left drainable)."""
+import threading
+
+import pytest
+
+from repro.core.accelerator import AcceleratorSpec
+from repro.core.cluster import Cluster
+from repro.core.runtime import RuntimeDef, SimProfile
+from repro.gateway import (EngineBackend, Gateway, SimBackend, Workflow,
+                           WorkflowStepError)
+
+GPU = AcceleratorSpec(type="gpu-k600", slots=2, mem_bytes=1 << 30,
+                      cost_per_hour=0.5)
+VPU = AcceleratorSpec(type="vpu-ncs", slots=1, mem_bytes=512 << 20,
+                      cost_per_hour=0.1)
+
+
+def stage_runtime(rid, acc_type, tag=None, fail_first=0):
+    """A runtime usable on BOTH backends: sim placement via ``acc_type``'s
+    profile, real execution via ``fn``.  Appends ``tag`` to the input's
+    ``stages`` list (flattening a fan-in list input), so a chain's output
+    records the path it actually took.  Fails its first ``fail_first``
+    calls (shared across retries) to exercise retry/failure policy."""
+    tag = tag or rid
+    calls = {"n": 0}
+
+    def fn(data, config):
+        calls["n"] += 1
+        if calls["n"] <= fail_first:
+            raise RuntimeError(f"{rid} exploded (call {calls['n']})")
+        if isinstance(data, list):          # fan-in: list of parent outputs
+            stages = [s for d in data
+                      for s in (d.get("stages", [])
+                                if isinstance(d, dict) else [])]
+        elif isinstance(data, dict):
+            stages = list(data.get("stages", []))
+        else:
+            stages = []
+        return {"stages": stages + [tag]}
+
+    rdef = RuntimeDef(
+        runtime_id=rid,
+        profiles={acc_type: SimProfile(elat_median_s=0.5, cold_start_s=1.0),
+                  "host-jax": SimProfile(elat_median_s=0.01)},
+        fn=fn)
+    return rdef, calls
+
+
+def het_gateway(backend):
+    """vpu-type detect + gpu-type encode/caption on the given backend."""
+    gw = Gateway(backend)
+    for rid, acc in (("detect", "vpu-ncs"), ("encode", "gpu-k600"),
+                     ("caption", "gpu-k600")):
+        gw.register(stage_runtime(rid, acc)[0])
+    return gw
+
+
+def sim_backend():
+    cl = Cluster(scheduler="warm", seed=0)
+    cl.add_node("het-node", [GPU, VPU])
+    return SimBackend(cl)
+
+
+def chain_workflow():
+    wf = Workflow("pipeline")
+    a = wf.step("detect", "detect", payload={"stages": []})
+    b = wf.step("encode", "encode", after=a)
+    wf.step("caption", "caption", after=b)
+    return wf
+
+
+# ---------------------------------------------------- acceptance: chain
+@pytest.mark.parametrize("make_backend", [sim_backend, EngineBackend],
+                         ids=["sim", "engine"])
+def test_heterogeneous_chain_completes_on_both_backends(make_backend):
+    """A 3-step vpu-type -> gpu-type -> gpu-type chain submitted as ONE
+    Workflow completes, with every intermediate payload resolved through
+    the object store (child data_ref IS the parent's result_ref)."""
+    gw = het_gateway(make_backend())
+    fut = gw.submit_workflow(chain_workflow())
+    out = fut.result()
+    assert out["stages"] == ["detect", "encode", "caption"]
+    assert fut.done()
+    assert set(fut.statuses().values()) == {"done"}
+
+    det = fut.step_future("detect").invocation
+    enc = fut.step_future("encode").invocation
+    cap = fut.step_future("caption").invocation
+    # node-to-node data plane: outputs were never shuttled by the client
+    assert enc.data_ref == det.result_ref
+    assert cap.data_ref == enc.result_ref
+    assert enc.data_ref in gw.backend.store
+    assert gw.backend.store.get(enc.data_ref)["stages"] == ["detect"]
+    # provenance tagged for metrics/tracing
+    assert det.workflow == "pipeline" and det.step == "detect"
+    # dependency ordering is real, not coincidental: a child's RStart is
+    # at/after the instant its parent's result landed in the store (NEnd)
+    assert det.n_end <= enc.r_start and enc.n_end <= cap.r_start
+    assert det.e_end <= enc.e_start <= enc.e_end <= cap.e_start
+
+
+def test_sim_chain_places_steps_on_declared_accelerator_types():
+    gw = het_gateway(sim_backend())
+    fut = gw.submit_workflow(chain_workflow())
+    fut.result()
+    assert "vpu-ncs" in fut.step_future("detect").invocation.accelerator
+    assert "gpu-k600" in fut.step_future("encode").invocation.accelerator
+    assert "gpu-k600" in fut.step_future("caption").invocation.accelerator
+
+
+# ------------------------------------------------------ fan-out / fan-in
+@pytest.mark.parametrize("make_backend", [sim_backend, EngineBackend],
+                         ids=["sim", "engine"])
+def test_fan_out_fan_in_gathers_in_declared_order(make_backend):
+    gw = het_gateway(make_backend())
+    wf = Workflow("fan")
+    tiles = wf.fan_out("see", "detect", payloads=[{"stages": []}] * 3)
+    solo = wf.step("hear", "encode", payload={"stages": []})
+    wf.step("join", "caption", after=tiles + [solo])
+    fut = gw.submit_workflow(wf)
+    out = fut.result()
+    # 3 detect outputs + 1 encode output, gathered in declared order
+    assert out["stages"] == ["detect"] * 3 + ["encode", "caption"]
+    join = fut.step_future("join").invocation
+    gathered = gw.backend.store.get(join.data_ref)
+    assert isinstance(gathered, list) and len(gathered) == 4
+    assert [d["stages"][-1] for d in gathered] == ["detect"] * 3 + ["encode"]
+
+
+# ------------------------------------------------------------- failure
+def test_failing_middle_step_names_step_and_cancels_downstream_engine():
+    """The ISSUE's contract: a chain whose middle step raises must fail the
+    workflow future with that step named, must not orphan downstream steps,
+    and must leave the engine dispatcher drainable."""
+    eb = EngineBackend(n_workers=2, batch_wait_s=0.0)
+    gw = het_gateway(eb)
+    bad, _ = stage_runtime("bad-encode", "gpu-k600", fail_first=99)
+    gw.register(bad)
+    wf = Workflow("doomed")
+    a = wf.step("detect", "detect", payload={"stages": []})
+    b = wf.step("encode", "bad-encode", after=a)
+    c = wf.step("caption", "caption", after=b)
+    wf.step("subtitle", "caption", after=c)
+    fut = gw.submit_workflow(wf)
+    with pytest.raises(WorkflowStepError) as ei:
+        fut.result(extra_time_s=30.0)
+    err = ei.value
+    assert err.step == "encode"
+    assert "encode" in str(err) and "exploded" in str(err)
+    assert err.invocation is not None and not err.invocation.success
+    st = fut.statuses()
+    assert st == {"detect": "done", "encode": "failed",
+                  "caption": "cancelled", "subtitle": "cancelled"}
+    # cancelled steps were never submitted -> nothing orphaned
+    assert fut.step_future("caption") is None
+    assert gw.backlog() == 0
+    gw.drain(extra_time_s=5.0)          # returns immediately: drainable
+    # and the dispatcher still serves fresh work afterwards
+    assert gw.invoke("detect", {"stages": []}).result(
+        extra_time_s=10.0)["stages"] == ["detect"]
+    eb.shutdown()
+
+
+def test_failing_middle_step_propagates_on_sim_backend_too():
+    gw = het_gateway(sim_backend())
+    bad, _ = stage_runtime("bad-encode", "gpu-k600", fail_first=99)
+    gw.register(bad)
+    wf = Workflow("doomed-sim")
+    a = wf.step("detect", "detect", payload={"stages": []})
+    b = wf.step("encode", "bad-encode", after=a)
+    wf.step("caption", "caption", after=b)
+    fut = gw.submit_workflow(wf)
+    with pytest.raises(WorkflowStepError) as ei:
+        fut.result()
+    assert ei.value.step == "encode"
+    assert fut.statuses()["caption"] == "cancelled"
+
+
+@pytest.mark.parametrize("make_backend", [sim_backend, EngineBackend],
+                         ids=["sim", "engine"])
+def test_retry_policy_resubmits_until_success(make_backend):
+    gw = Gateway(make_backend())
+    flaky, calls = stage_runtime("flaky", "gpu-k600", fail_first=2)
+    gw.register(flaky)
+    wf = Workflow("retrying")
+    wf.step("only", "flaky", payload={"stages": []}, retries=2)
+    fut = gw.submit_workflow(wf)
+    assert fut.result()["stages"] == ["flaky"]
+    assert calls["n"] == 3                  # two failures + one success
+    assert fut.step_future("only").invocation.success
+
+
+def test_retries_exhausted_still_fails_with_step_named():
+    gw = Gateway(EngineBackend(n_workers=1, batch_wait_s=0.0))
+    flaky, calls = stage_runtime("flaky", "gpu-k600", fail_first=99)
+    gw.register(flaky)
+    wf = Workflow("hopeless")
+    wf.step("only", "flaky", payload={"stages": []}, retries=1)
+    fut = gw.submit_workflow(wf)
+    with pytest.raises(WorkflowStepError) as ei:
+        fut.result(extra_time_s=30.0)
+    assert ei.value.step == "only" and ei.value.attempts == 2
+    assert calls["n"] == 2
+
+
+# ------------------------------------------- engine batching interleave
+def test_steps_from_concurrent_workflows_interleave_into_micro_batches():
+    """Workflow provenance is not part of runtime_key, so same-runtime
+    steps of DIFFERENT live workflows merge into one micro-batch."""
+    release = threading.Event()
+
+    def batch_fn(datas, config):
+        release.wait(timeout=10.0)
+        return [{"n_in_batch": len(datas)} for _ in datas]
+
+    rdef = RuntimeDef(
+        runtime_id="batchy",
+        profiles={"host-jax": SimProfile(elat_median_s=0.01)},
+        batch_fn=batch_fn, max_batch=8)
+    eb = EngineBackend(n_workers=1, max_batch=8, batch_wait_s=0.25)
+    gw = Gateway(eb)
+    gw.register(rdef)
+    futs = []
+    for i in range(4):
+        wf = Workflow(f"wf{i}")
+        wf.step("s", "batchy", payload={"i": i})
+        futs.append(gw.submit_workflow(wf))
+    release.set()
+    outs = [f.result(extra_time_s=30.0) for f in futs]
+    assert max(eb.batch_sizes) >= 2         # cross-workflow micro-batch
+    assert all(o["n_in_batch"] >= 1 for o in outs)
+    eb.shutdown()
+
+
+# ----------------------------------------------- serve-runtime adapters
+def test_serve_runtimes_compose_as_chain_and_fan_in_targets():
+    """make_serve_runtime accepts an upstream step's {"outputs"} record
+    (chain) and a gathered list of parent records (fan-in) as prompts —
+    no client-side adapter between serving stages."""
+    from repro.configs import get_config
+    from repro.serve.api import make_serve_runtime
+
+    eb = EngineBackend(n_workers=1)
+    gw = Gateway(eb)
+    rid = gw.register(make_serve_runtime(
+        get_config("granite-3-2b").reduced(), max_slots=2, max_len=48))
+    cfg = {"max_new_tokens": 3}
+    wf = Workflow("serve-compose")
+    a = wf.step("a", rid, payload={"prompts": [[1, 5, 9]]}, config=cfg)
+    b = wf.step("b", rid, after=a, config=cfg)            # chain
+    c = wf.step("c", rid, payload={"prompts": [[2, 6]]}, config=cfg)
+    wf.step("join", rid, after=[b, c], config=cfg)        # fan-in
+    fut = gw.submit_workflow(wf)
+    out = fut.result(extra_time_s=120.0)
+    assert set(fut.statuses().values()) == {"done"}
+    # the gather fed one prompt from each parent -> two generations
+    assert len(out["outputs"]) == 2
+    assert all(len(o) == 3 for o in out["outputs"])
+    eb.shutdown()
+
+
+# ------------------------------------------------------------ validation
+def test_workflow_validation_rejects_bad_shapes():
+    wf = Workflow("v")
+    a = wf.step("a", "rt", payload=1)
+    with pytest.raises(ValueError):         # duplicate name
+        wf.step("a", "rt")
+    with pytest.raises(ValueError):         # two input sources
+        wf.step("b", "rt", payload=1, after=a)
+    other = Workflow("other")
+    foreign = other.step("x", "rt")
+    with pytest.raises(ValueError):         # dep from another workflow
+        wf.step("c", "rt", after=foreign)
+    gw = Gateway(EngineBackend())
+    with pytest.raises(ValueError):         # empty workflow
+        gw.submit_workflow(Workflow("empty"))
+    # sinks: a is the only declared step without dependents
+    assert [s.name for s in wf.sinks()] == ["a"]
+
+
+def test_multi_sink_workflow_returns_dict_of_outputs():
+    gw = het_gateway(EngineBackend())
+    wf = Workflow("two-sinks")
+    a = wf.step("src", "detect", payload={"stages": []})
+    wf.step("left", "encode", after=a)
+    wf.step("right", "caption", after=a)
+    out = gw.submit_workflow(wf).result(extra_time_s=30.0)
+    assert set(out) == {"left", "right"}
+    assert out["left"]["stages"] == ["detect", "encode"]
+    assert out["right"]["stages"] == ["detect", "caption"]
