@@ -127,6 +127,47 @@ def _sec_workflow() -> Dict[str, Any]:
     return w
 
 
+def _sec_coldstart() -> Dict[str, Any]:
+    # --- control plane: cold vs warm vs prewarmed invoke latency --------
+    from benchmarks.bench_coldstart import bench as cs_bench
+    t0 = time.perf_counter()
+    c = cs_bench(real=True)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(c), 1)
+    life = c["sim/lifecycle"]
+    _row("coldstart_sim_lifecycle", us,
+         f"cold={life['cold_rlat_s']:.2f}s warm={life['warm_rlat_s']:.2f}s "
+         f"ratio={life['cold_to_warm_rlat_ratio']:.2f}x")
+    pre = c["sim/prewarm"]
+    _row("coldstart_sim_prewarm", us,
+         f"warm_fraction={pre['warm_fraction']:.2f} "
+         f"cold_starts={pre['cold_starts']} (min_warm=1)")
+    if "engine/speedup" in c:
+        _row("coldstart_engine_prewarm_speedup", us,
+             f"first_invoke="
+             f"{c['engine/speedup']['prewarmed_first_invoke_speedup']:.1f}x "
+             f"(prewarmed vs cold)")
+    return c
+
+
+def _sec_controlplane() -> Dict[str, Any]:
+    # --- control plane: SLO scaler vs queue pressure, tenant quotas -----
+    from benchmarks.bench_controlplane import bench as cp_bench
+    t0 = time.perf_counter()
+    p = cp_bench()
+    us = (time.perf_counter() - t0) * 1e6 / max(len(p), 1)
+    for name in ("queue_pressure", "slo"):
+        r = p[f"sim/{name}"]
+        _row(f"controlplane_{name}", us,
+             f"p99={r['rlat_p99_s']:.1f}s slo={r['slo_p99_s']:.0f}s "
+             f"holds={int(r['holds_slo'])} node_s={r['node_seconds']:.0f}")
+    t = p["sim/tenants"]
+    _row("controlplane_tenants", us,
+         f"free={t['free_served']}/{t['free_offered']} "
+         f"(shed {t['free_shed']}) paid={t['paid_served']} "
+         f"(shed {t['paid_shed']})")
+    return p
+
+
 def _sec_serving() -> Dict[str, Any]:
     # --- serving engine (real JAX execution) ----------------------------
     from benchmarks.bench_serving import bench as serving_bench
@@ -163,6 +204,8 @@ SECTIONS: List[Tuple[str, Callable[[], Dict[str, Any]]]] = [
     ("elasticity", _sec_elasticity),
     ("gateway", _sec_gateway),
     ("workflow", _sec_workflow),
+    ("coldstart", _sec_coldstart),
+    ("controlplane", _sec_controlplane),
     ("serving", _sec_serving),
     ("roofline", _sec_roofline),
 ]
@@ -180,6 +223,15 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     tokens = args.only.split(",") if args.only else None
+    if tokens is not None:
+        # every token must name at least one section — a typo'd token
+        # silently running nothing (or only the other tokens' sections)
+        # is how perf gates rot
+        unknown = [t for t in tokens
+                   if not any(t and t in n for n, _ in SECTIONS)]
+        if unknown:
+            ap.error(f"--only: unknown section(s) {unknown} "
+                     f"(valid: {[n for n, _ in SECTIONS]})")
     picked = [(n, f) for n, f in SECTIONS
               if tokens is None or any(t and t in n for t in tokens)]
     if not picked:

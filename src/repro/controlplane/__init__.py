@@ -1,0 +1,17 @@
+"""Serverless control plane: SLO-driven autoscaling, warm-pool /
+cold-start management, and per-tenant admission over any gateway backend
+(sim cluster or engine dispatcher) — see ``docs/controlplane.md``."""
+from repro.controlplane.admission import (AdmissionController,
+                                          AdmissionPolicy, TokenBucket)
+from repro.controlplane.plane import (ControlPlane, ControlPlaneConfig,
+                                      build_control_plane)
+from repro.controlplane.scaler import SLOPolicy, SLOScaler
+from repro.controlplane.telemetry import (RuntimeStats, TelemetryBus,
+                                          TelemetryConfig, TelemetrySnapshot)
+from repro.controlplane.warmpool import WarmPolicy, WarmPoolManager
+
+__all__ = ["AdmissionController", "AdmissionPolicy", "TokenBucket",
+           "ControlPlane", "ControlPlaneConfig", "build_control_plane",
+           "SLOPolicy", "SLOScaler",
+           "RuntimeStats", "TelemetryBus", "TelemetryConfig",
+           "TelemetrySnapshot", "WarmPolicy", "WarmPoolManager"]

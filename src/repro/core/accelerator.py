@@ -8,7 +8,7 @@ GPU, a VPU stick, or — in the TPU adaptation — a pod mesh *slice*.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, FrozenSet, Optional, Set
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +29,9 @@ class Accelerator:
     busy_slots: int = 0
     # warm runtime instances resident on this accelerator: runtime_key -> t_idle
     warm: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # keys whose resident instance was installed by a control-plane prewarm
+    # and has not served an event yet (consumed for cold-start attribution)
+    prewarmed: Set[str] = dataclasses.field(default_factory=set)
     total_busy_time: float = 0.0   # for utilization accounting
     n_executions: int = 0
 
@@ -47,17 +50,22 @@ class Accelerator:
         assert self.busy_slots > 0
         self.busy_slots -= 1
 
-    def mark_warm(self, runtime_key: str, now: float, max_warm: int = 4
-                  ) -> Optional[str]:
+    def mark_warm(self, runtime_key: str, now: float, max_warm: int = 4,
+                  pinned: FrozenSet[str] = frozenset()) -> Optional[str]:
         """Register a warm instance; returns an evicted key (LRU) if over
-        the memory budget."""
+        the memory budget.  ``pinned`` keys (control-plane min-warm
+        floors) are never the eviction victim."""
         self.warm[runtime_key] = now
         if len(self.warm) > max_warm:
-            lru = min(self.warm, key=self.warm.get)
-            if lru != runtime_key:
+            victims = [k for k in self.warm
+                       if k != runtime_key and k not in pinned]
+            if victims:
+                lru = min(victims, key=self.warm.get)
                 del self.warm[lru]
+                self.prewarmed.discard(lru)
                 return lru
         return None
 
     def evict(self, runtime_key: str) -> None:
         self.warm.pop(runtime_key, None)
+        self.prewarmed.discard(runtime_key)

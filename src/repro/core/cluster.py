@@ -72,11 +72,31 @@ class Cluster:
                        key=f"runtime:{rdef.runtime_id}")
 
     # -- client API (the serverless front door) --------------------------
-    def submit(self, inv: Invocation) -> None:
+    def submit(self, inv: Invocation, gate=None) -> None:
+        """Schedule the event's publication at its RStart.  ``gate`` (the
+        admission controller) is consulted *at arrival time on the clock*;
+        returning a reason string sheds the event as ``rejected`` instead
+        of publishing it."""
         inv.r_start = self.clock.now() if inv.r_start is None else inv.r_start
         self._horizon = max(self._horizon, inv.r_start)
-        self.clock.call_at(inv.r_start,
-                           lambda: self.queue.publish(inv, inv.r_start))
+
+        def publish():
+            reason = gate(inv) if gate is not None else None
+            if reason is not None:
+                self._shed(inv, reason)
+            else:
+                self.queue.publish(inv, inv.r_start)
+        self.clock.call_at(inv.r_start, publish)
+
+    def _shed(self, inv: Invocation, reason: str) -> None:
+        """Settle an admission-shed event as rejected (never executed)."""
+        t = max(self.clock.now(), inv.r_start or 0.0)
+        inv.n_start = inv.e_start = inv.e_end = inv.n_end = inv.r_end = t
+        inv.rejected = True
+        inv.success = False
+        inv.error = f"rejected: {reason}"
+        self.store.persist_outcome(inv, None, inv.error)
+        self.metrics.record(inv)
 
     def run_workloads(self, workloads: Sequence[PhaseWorkload],
                       extra_time_s: float = 600.0) -> MetricsCollector:

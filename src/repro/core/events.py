@@ -14,6 +14,18 @@ from typing import Any, Dict, Optional
 
 _ids = itertools.count()
 
+DEFAULT_TENANT = "default"
+
+
+def runtime_key_for(runtime_id: str,
+                    config: Optional[Dict[str, Any]] = None) -> str:
+    """The paper's "same configuration" warm-reuse identity for a
+    (runtime, run configuration) pair — computable without building an
+    :class:`Invocation` (the control plane prewarms by key)."""
+    cfg = ",".join(f"{k}={config[k]}" for k in sorted(config or {})
+                   if k not in ("payload",))
+    return f"{runtime_id}|{cfg}"
+
 
 @dataclasses.dataclass
 class Invocation:
@@ -41,6 +53,11 @@ class Invocation:
     result_ref: Optional[str] = None
     error: Optional[str] = None
     rejected: bool = False              # shed at admission (backpressure)
+    prewarmed: bool = False             # served by a control-plane-prewarmed
+    #                                     instance (policy-attributable warmth)
+
+    # --- multi-tenancy (admission control groups events by tenant) ---
+    tenant: str = DEFAULT_TENANT
 
     # --- workflow provenance (None for standalone events) ---
     # set by the workflow runner so metrics/traces can group the events of
@@ -54,9 +71,7 @@ class Invocation:
     def runtime_key(self) -> str:
         """The "same configuration" identity the paper's warm-reuse check
         uses: runtime + run config (e.g. model variant)."""
-        cfg = ",".join(f"{k}={self.config[k]}" for k in sorted(self.config)
-                       if k not in ("payload",))
-        return f"{self.runtime_id}|{cfg}"
+        return runtime_key_for(self.runtime_id, self.config)
 
     @property
     def rlat(self) -> Optional[float]:

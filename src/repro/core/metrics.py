@@ -7,6 +7,7 @@ completions over the trailing 10 s window), and #queued timelines.
 from __future__ import annotations
 
 import bisect
+import math
 import statistics
 from typing import Dict, List, Optional, Tuple
 
@@ -44,11 +45,30 @@ class MetricsCollector:
         return statistics.median(e) if e else None
 
     def percentile(self, values: List[float], p: float) -> Optional[float]:
+        """Nearest-rank percentile: the smallest value with at least
+        ``p``% of the sample at or below it (so p50 of ``[1, 2]`` is 1,
+        not 2 — rank ``ceil(p/100*n)``, clamped to the sample)."""
         if not values:
             return None
         values = sorted(values)
-        idx = min(int(p / 100.0 * len(values)), len(values) - 1)
-        return values[idx]
+        idx = max(math.ceil(p / 100.0 * len(values)) - 1, 0)
+        return values[min(idx, len(values) - 1)]
+
+    # -- window queries (the control plane's telemetry source) ----------
+    def window(self, t0: float, t1: Optional[float] = None,
+               runtime_id: Optional[str] = None) -> List[Invocation]:
+        """Completed invocations whose REnd falls in ``[t0, t1]``
+        (``t1=None`` = no upper bound), optionally for one runtime."""
+        return [i for i in self.completed
+                if i.r_end is not None and i.r_end >= t0
+                and (t1 is None or i.r_end <= t1)
+                and (runtime_id is None or i.runtime_id == runtime_id)]
+
+    def since(self, idx: int) -> List[Invocation]:
+        """Completions recorded at list index ``idx`` or later — the
+        incremental cursor telemetry samplers use (records are append-only,
+        so ``since(len_seen)`` is every completion since the last sample)."""
+        return self.completed[idx:]
 
     # ------------------------------------------------------------------
     def rfast_timeline(self, step: float = 1.0,
@@ -91,4 +111,76 @@ class MetricsCollector:
             "rlat_max": rl[-1] if rl else 0.0,
             "elat_p50": self.percentile(el, 50) or 0.0,
             "cold_starts": sum(1 for i in self.completed if i.cold_start),
+            "prewarmed": sum(1 for i in self.completed if i.prewarmed),
+            "rejected": sum(1 for i in self.completed if i.rejected),
         }
+
+    # -- machine-readable dumps (ops tooling / --metrics-out) -----------
+    def per_runtime(self) -> Dict[str, Dict[str, float]]:
+        """Per-runtime breakdown of the same derived numbers."""
+        out: Dict[str, Dict[str, float]] = {}
+        for rid in sorted({i.runtime_id for i in self.completed}):
+            invs = [i for i in self.completed if i.runtime_id == rid]
+            ok = [i for i in invs if i.success]
+            rl = sorted(i.rlat for i in ok if i.rlat is not None)
+            el = sorted(i.elat for i in ok if i.elat is not None)
+            out[rid] = {
+                "n_completed": len(invs),
+                "r_success": len(ok),
+                "rlat_p50": self.percentile(rl, 50) or 0.0,
+                "rlat_p99": self.percentile(rl, 99) or 0.0,
+                "elat_p50": self.percentile(el, 50) or 0.0,
+                "cold_starts": sum(1 for i in invs if i.cold_start),
+                "prewarmed": sum(1 for i in invs if i.prewarmed),
+                "rejected": sum(1 for i in invs if i.rejected),
+            }
+        return out
+
+    def per_tenant(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant completion/shed counts (admission accounting)."""
+        out: Dict[str, Dict[str, float]] = {}
+        for tenant in sorted({i.tenant for i in self.completed}):
+            invs = [i for i in self.completed if i.tenant == tenant]
+            out[tenant] = {
+                "n_completed": len(invs),
+                "r_success": sum(1 for i in invs if i.success),
+                "rejected": sum(1 for i in invs if i.rejected),
+            }
+        return out
+
+    def to_json(self) -> Dict[str, object]:
+        """The full derived-metrics record as one JSON-serializable dict
+        (aggregate summary + per-runtime + per-tenant breakdowns), so
+        bench/ops tooling stops re-deriving summaries by hand."""
+        return {
+            "summary": self.summary(),
+            "per_runtime": self.per_runtime(),
+            "per_tenant": self.per_tenant(),
+        }
+
+    def prometheus_text(self, prefix: str = "hardless") -> str:
+        """Prometheus text-exposition dump of the summary gauges, with
+        per-runtime samples labelled ``{runtime="..."}`` and per-tenant
+        shed/served counters labelled ``{tenant="..."}``."""
+        s = self.summary()
+        lines = []
+        for name, help_txt in (
+                ("n_completed", "settled invocations"),
+                ("r_success", "successful invocations"),
+                ("rlat_p50", "request latency p50 (s)"),
+                ("rlat_p99", "request latency p99 (s)"),
+                ("elat_p50", "execution latency p50 (s)"),
+                ("cold_starts", "invocations that paid a cold start"),
+                ("prewarmed", "invocations served by a prewarmed instance"),
+                ("rejected", "invocations shed at admission")):
+            lines.append(f"# HELP {prefix}_{name} {help_txt}")
+            lines.append(f"# TYPE {prefix}_{name} gauge")
+            lines.append(f"{prefix}_{name} {s[name]}")
+        for rid, r in self.per_runtime().items():
+            for k in ("r_success", "rlat_p50", "rlat_p99", "cold_starts",
+                      "rejected"):
+                lines.append(f'{prefix}_runtime_{k}{{runtime="{rid}"}} {r[k]}')
+        for tenant, r in self.per_tenant().items():
+            for k in ("r_success", "rejected"):
+                lines.append(f'{prefix}_tenant_{k}{{tenant="{tenant}"}} {r[k]}')
+        return "\n".join(lines) + "\n"

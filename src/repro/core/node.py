@@ -9,7 +9,7 @@ actually runs JAX and ELat is measured wall time).
 from __future__ import annotations
 
 import random
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
 
 from repro.core.accelerator import Accelerator
 from repro.core.events import Invocation
@@ -44,8 +44,10 @@ class NodeManager:
         self.rng = random.Random(seed)
         self.n_cold_starts = 0
         self.n_warm_starts = 0
+        self.n_prewarms = 0
         self.draining = False        # set by the autoscaler: finish current
         #                              work, take no new events
+        self.pinned: Set[str] = set()    # min-warm keys exempt from eviction
         self._real_handles: Dict[str, object] = {}   # runtime_key -> setup()
         queue.subscribe(self._on_publish)
 
@@ -92,9 +94,14 @@ class NodeManager:
         inv.cold_start = not warm
         if warm:
             self.n_warm_starts += 1
+            # first hit on a control-plane-prewarmed instance: the warmth
+            # is policy-attributable, not luck-of-the-LRU
+            inv.prewarmed = inv.runtime_key in acc.prewarmed
+            acc.prewarmed.discard(inv.runtime_key)
         else:
             self.n_cold_starts += 1
-            evicted = acc.mark_warm(inv.runtime_key, now, self.max_warm)
+            evicted = acc.mark_warm(inv.runtime_key, now, self.max_warm,
+                                    pinned=self.pinned)
             if evicted and evicted in self._real_handles:
                 del self._real_handles[evicted]
 
@@ -143,7 +150,8 @@ class NodeManager:
         # store; gateway futures poll this key for completion) — the failure
         # record, not the payload, when the event did not succeed
         self.store.persist_outcome(inv, result if err is None else None, err)
-        acc.mark_warm(inv.runtime_key, now, self.max_warm)
+        acc.mark_warm(inv.runtime_key, now, self.max_warm,
+                      pinned=self.pinned)
         acc.total_busy_time += inv.e_end - (inv.e_start or now)
         acc.n_executions += 1
         acc.release()
@@ -177,11 +185,47 @@ class NodeManager:
         self.metrics.record(inv)
 
     def _maybe_scale_to_zero(self, acc: Accelerator, runtime_key: str) -> None:
+        if runtime_key in self.pinned:       # min-warm floor holds it
+            return
         t_idle = acc.warm.get(runtime_key)
         if t_idle is not None and \
                 self.clock.now() - t_idle >= self.idle_timeout - 1e-9:
             acc.evict(runtime_key)
             self._real_handles.pop(runtime_key, None)
+
+    # -- control-plane actuation ----------------------------------------
+    def prewarm(self, runtime_key: str, acc: Accelerator,
+                cold_start_s: float, setup=None) -> None:
+        """Install a warm instance for ``runtime_key`` on ``acc`` off the
+        critical path: the instance becomes resident ``cold_start_s`` from
+        now (process spawn + model load happen in the background, without
+        holding an execution slot), and the first event it serves is
+        attributed ``prewarmed`` instead of paying the cold start."""
+        def ready():
+            if self.draining or acc.has_warm(runtime_key):
+                return
+            evicted = acc.mark_warm(runtime_key, self.clock.now(),
+                                    self.max_warm, pinned=self.pinned)
+            if evicted and evicted in self._real_handles:
+                del self._real_handles[evicted]
+            acc.prewarmed.add(runtime_key)
+            if setup is not None and runtime_key not in self._real_handles:
+                self._real_handles[runtime_key] = setup()
+            self.n_prewarms += 1
+            # a warm instance may unblock a queued same-config event
+            self.try_start_work()
+        self.clock.call_in(cold_start_s, ready)
+
+    def evict_warm(self, runtime_key: str) -> bool:
+        """Evict a warm instance everywhere on this node (keep-alive TTL
+        expiry); True when something was resident."""
+        hit = False
+        for acc in self.accelerators:
+            if acc.has_warm(runtime_key):
+                acc.evict(runtime_key)
+                hit = True
+        self._real_handles.pop(runtime_key, None)
+        return hit
 
     # ------------------------------------------------------------------
     def utilization(self, horizon: float) -> Dict[str, float]:

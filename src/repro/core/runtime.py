@@ -72,6 +72,12 @@ class RuntimeDef:
     # payload so a jitted batch_fn only ever sees these leading batch
     # shapes (bounded jit cache); results past ``n_real`` are discarded.
     batch_buckets: Optional[Tuple[int, ...]] = None
+    # control-plane warm-pool hints (a WarmPolicy overrides them):
+    # keep at least this many instances resident (prewarmed on attach) ...
+    min_warm: int = 0
+    # ... and keep idle instances alive this long before evicting
+    # (None = the platform default keep-alive)
+    keep_alive_s: Optional[float] = None
 
     def supports(self, acc_type: str) -> bool:
         """True when accelerator type ``acc_type`` can serve this runtime."""

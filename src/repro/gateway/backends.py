@@ -21,13 +21,74 @@ from __future__ import annotations
 import threading
 import time
 from collections import OrderedDict, deque
-from typing import Any, Deque, List, Optional, Sequence
+from typing import Any, Deque, Dict, List, Optional, Sequence, Set
 
+from repro.core.accelerator import AcceleratorSpec
 from repro.core.cluster import Cluster
-from repro.core.events import Invocation
+from repro.core.events import Invocation, runtime_key_for
 from repro.core.metrics import MetricsCollector
 from repro.core.runtime import HOST_ACC, RuntimeDef, RuntimeRegistry, run_batch
 from repro.core.storage import ObjectStore
+
+
+class CapacityHooks:
+    """The control plane's actuation + observation surface on a backend.
+
+    Capacity is counted in backend-native *units* — whole accelerator
+    nodes on the sim cluster, dispatcher workers (one per device) on the
+    engine — so one policy drives both.  Observation methods are cheap
+    and safe to call from a control-plane tick (sim: clock callback;
+    engine: background thread); actuation methods never block on work.
+    """
+
+    # -- observation -----------------------------------------------------
+    def capacity(self) -> int:
+        """Current capacity units (live + being retired counts as live)."""
+        raise NotImplementedError
+
+    def pending(self) -> int:
+        """Units being provisioned (requested but not serving yet)."""
+        raise NotImplementedError
+
+    def queue_depth(self) -> int:
+        """Events admitted but not yet executing."""
+        raise NotImplementedError
+
+    def inflight(self) -> int:
+        """Events currently executing."""
+        raise NotImplementedError
+
+    def backlog_by_runtime(self) -> Dict[str, int]:
+        """Queued event count per runtime_id (fair-share accounting)."""
+        raise NotImplementedError
+
+    def warm_state(self) -> Dict[str, float]:
+        """runtime_key -> idle seconds for every resident warm instance."""
+        raise NotImplementedError
+
+    def warm_count(self, runtime_key: str) -> int:
+        """Resident + in-flight-prewarm instances for ``runtime_key``."""
+        raise NotImplementedError
+
+    # -- actuation -------------------------------------------------------
+    def set_target(self, n: int) -> None:
+        """Request capacity = ``n`` units (provision/drain the delta)."""
+        raise NotImplementedError
+
+    def prewarm(self, runtime_id: str,
+                config: Optional[Dict[str, Any]] = None) -> bool:
+        """Install one warm instance for (runtime, config) off the
+        critical path; False when nothing could be prewarmed (no
+        capacity, unsupported runtime, or already in progress)."""
+        raise NotImplementedError
+
+    def evict(self, runtime_key: str) -> bool:
+        """Evict a warm instance (keep-alive TTL expiry)."""
+        raise NotImplementedError
+
+    def pin(self, keys: Set[str]) -> None:
+        """Exempt ``keys`` from idle/LRU eviction (min-warm floors)."""
+        raise NotImplementedError
 
 
 class Backend:
@@ -42,6 +103,15 @@ class Backend:
     # to advance a clock (the sim).  The workflow runner uses this to decide
     # between a background driver thread and pull-driven stepping.
     autonomous = False
+    # an attached ControlPlane (repro.controlplane).  When set, submit()
+    # routes every event through controller.admit() — quota/fair-share
+    # sheds settle as ``rejected`` through the ordinary future path — and
+    # arrivals feed the telemetry bus.
+    controller = None
+
+    def capacity_hooks(self) -> CapacityHooks:
+        """This backend's control-plane actuation surface (cached)."""
+        raise NotImplementedError
 
     def register(self, rdef: RuntimeDef) -> None:
         """Publish ``rdef`` into this backend's runtime catalogue."""
@@ -86,15 +156,42 @@ class SimBackend(Backend):
         self.registry = self.cluster.registry
         self.metrics = self.cluster.metrics
         self._n_submitted = 0
+        self._hooks: Optional["SimCapacityHooks"] = None
 
     def register(self, rdef: RuntimeDef) -> None:
         """Publish ``rdef`` into the cluster's registry + object store."""
         self.cluster.register_runtime(rdef)
 
     def submit(self, inv: Invocation) -> None:
-        """Schedule the event's publication at its RStart on the sim clock."""
+        """Schedule the event's publication at its RStart on the sim clock
+        (admission-gated at arrival time when a control plane is attached)."""
         self._n_submitted += 1
-        self.cluster.submit(inv)
+        gate = None
+        if self.controller is not None:
+            gate = lambda i: self.controller.admit(  # noqa: E731
+                i, self.cluster.clock.now())
+        self.cluster.submit(inv, gate=gate)
+
+    def capacity_hooks(self, spec: Optional[AcceleratorSpec] = None,
+                       node_prefix: str = "cp",
+                       provision_delay_s: float = 45.0
+                       ) -> "SimCapacityHooks":
+        """Control-plane surface over this cluster.  ``spec`` is the node
+        template scale-out provisions (default: the first accelerator spec
+        already in the cluster); built once and cached."""
+        if self._hooks is None:
+            if spec is None:
+                for node in self.cluster.nodes:
+                    if node.accelerators:
+                        spec = node.accelerators[0].spec
+                        break
+            if spec is None:
+                raise ValueError("empty cluster: pass spec= for the node "
+                                 "template capacity_hooks should provision")
+            self._hooks = SimCapacityHooks(
+                self, spec, node_prefix=node_prefix,
+                provision_delay_s=provision_delay_s)
+        return self._hooks
 
     def drain(self, extra_time_s: float = 600.0) -> None:
         """Run the clock far enough past the last RStart for all to finish."""
@@ -122,6 +219,112 @@ class SimBackend(Backend):
             if clock.now() > bound or not clock.step():
                 return False
         return True
+
+
+class SimCapacityHooks(CapacityHooks):
+    """Control-plane actuation over the sim cluster: capacity units are
+    whole nodes (driven through the same :class:`~repro.core.autoscaler.
+    NodeFleet` actuator the legacy queue-pressure autoscaler uses), warm
+    instances live on accelerators, prewarm is the node manager's
+    off-critical-path instance install."""
+
+    def __init__(self, backend: SimBackend, spec: AcceleratorSpec,
+                 node_prefix: str = "cp", provision_delay_s: float = 45.0):
+        from repro.core.autoscaler import NodeFleet
+        self.backend = backend
+        self.cluster = backend.cluster
+        self.fleet = NodeFleet(self.cluster, spec, node_prefix=node_prefix,
+                               provision_delay_s=provision_delay_s)
+        self._prewarming: Set[tuple] = set()    # (acc local_id, runtime_key)
+
+    # -- observation -----------------------------------------------------
+    def capacity(self) -> int:
+        """Non-draining nodes (seed + managed)."""
+        return len(self.fleet.active_nodes)
+
+    def pending(self) -> int:
+        """Nodes mid-provision (bring-up delay)."""
+        return self.fleet.pending
+
+    def queue_depth(self) -> int:
+        """Published events not yet taken by a node."""
+        return len(self.cluster.queue)
+
+    def inflight(self) -> int:
+        """Busy accelerator slots across the cluster."""
+        return sum(a.busy_slots for n in self.cluster.nodes
+                   for a in n.accelerators)
+
+    def backlog_by_runtime(self) -> Dict[str, int]:
+        """Queued events per runtime (from the scannable queue)."""
+        out: Dict[str, int] = {}
+        for inv in self.cluster.queue.scan():
+            out[inv.runtime_id] = out.get(inv.runtime_id, 0) + 1
+        return out
+
+    def warm_state(self) -> Dict[str, float]:
+        """Min idle seconds per warm runtime_key across accelerators."""
+        now = self.cluster.clock.now()
+        idle: Dict[str, float] = {}
+        for node in self.cluster.nodes:
+            for acc in node.accelerators:
+                for key, t in acc.warm.items():
+                    cur = now - t
+                    idle[key] = min(idle.get(key, cur), cur)
+        return idle
+
+    def warm_count(self, runtime_key: str) -> int:
+        """Accelerators holding the key warm + in-flight prewarms."""
+        resident = sum(1 for n in self.cluster.nodes
+                       for a in n.accelerators if a.has_warm(runtime_key))
+        pending = sum(1 for _, k in self._prewarming if k == runtime_key)
+        return resident + pending
+
+    # -- actuation -------------------------------------------------------
+    def set_target(self, n: int) -> None:
+        """Provision/drain whole nodes toward ``n`` active units."""
+        self.fleet.account()
+        current = len(self.fleet.active_nodes) + self.fleet.pending
+        if n > current:
+            self.fleet.provision(n - current)
+        else:
+            for _ in range(len(self.fleet.active_nodes) - n):
+                if self.fleet.drain_one() is None:
+                    break       # only managed nodes are drainable
+
+    def prewarm(self, runtime_id: str,
+                config: Optional[Dict[str, Any]] = None) -> bool:
+        """Install one warm instance on a supporting accelerator, off the
+        critical path (resident after the profile's cold-start delay)."""
+        rdef = self.cluster.registry.get(runtime_id)
+        key = runtime_key_for(runtime_id, config)
+        for node in self.cluster.nodes:
+            if node.draining:
+                continue
+            for acc in node.accelerators:
+                tag = (acc.local_id, key)
+                if not rdef.supports(acc.spec.type) or \
+                        acc.has_warm(key) or tag in self._prewarming:
+                    continue
+                self._prewarming.add(tag)
+                prof = rdef.profiles[acc.spec.type]
+                node.prewarm(key, acc, prof.cold_start_s, setup=rdef.setup)
+                # the in-flight marker clears when the instance lands
+                self.cluster.clock.call_in(
+                    prof.cold_start_s,
+                    lambda tag=tag: self._prewarming.discard(tag))
+                return True
+        return False
+
+    def evict(self, runtime_key: str) -> bool:
+        """Evict the key's warm instances on every node."""
+        return any([node.evict_warm(runtime_key)
+                    for node in self.cluster.nodes])
+
+    def pin(self, keys: Set[str]) -> None:
+        """Exempt ``keys`` from idle/LRU eviction on every node."""
+        for node in self.cluster.nodes:
+            node.pinned = set(keys)
 
 
 class _KeyQueue:
@@ -178,10 +381,15 @@ class EngineBackend(Backend):
         self.max_queue = max(int(max_queue), 1)
         self.n_cold_starts = 0
         self.n_warm_starts = 0
+        self.n_prewarms = 0
         self.n_rejected = 0
         self.n_batches = 0
         self.batch_sizes: List[int] = []
         self._handles: "OrderedDict[str, Any]" = OrderedDict()
+        self._handle_idle_since: Dict[str, float] = {}
+        self._pinned: Set[str] = set()       # min-warm keys, never evicted
+        self._prewarmed: Set[str] = set()    # installed by prewarm, unserved
+        self._prewarming: Set[str] = set()   # setup() in progress off-path
         self._t0 = time.monotonic()
 
         self._lock = threading.Lock()
@@ -192,35 +400,57 @@ class EngineBackend(Backend):
         self._n_pending = 0
         self._n_inflight = 0
         self._n_workers_req = n_workers
-        self._workers: List[threading.Thread] = []
+        self._target_workers: Optional[int] = None   # set_n_workers intent
+        self._started = False
+        self._threads: Dict[int, threading.Thread] = {}
         self._devices: List[Any] = []
         self._shutdown = False
+        self._hooks: Optional["EngineCapacityHooks"] = None
 
     # -- lifecycle -------------------------------------------------------
     def _start_workers_locked(self) -> None:
-        if self._workers or self._shutdown:
+        if self._started or self._shutdown:
             return
-        n = self._n_workers_req
+        self._started = True
         try:
             import jax
             self._devices = list(jax.devices())
         except Exception:
             self._devices = []
-        if n is None:
-            n = len(self._devices) or 1
-        self.n_workers = max(int(n), 1)
-        for w in range(self.n_workers):
-            t = threading.Thread(target=self._worker_loop, args=(w,),
-                                 name=f"engine-w{w}", daemon=True)
-            self._workers.append(t)
-            t.start()
+        if self._target_workers is None:
+            n = self._n_workers_req
+            if n is None:
+                n = len(self._devices) or 1
+            self._target_workers = max(int(n), 1)
+        self.n_workers = self._target_workers
+        self._spawn_to_target_locked()
+
+    def _spawn_to_target_locked(self) -> None:
+        for w in range(self._target_workers):
+            t = self._threads.get(w)
+            if t is None or not t.is_alive():
+                t = threading.Thread(target=self._worker_loop, args=(w,),
+                                     name=f"engine-w{w}", daemon=True)
+                self._threads[w] = t
+                t.start()
+
+    def set_n_workers(self, n: int) -> None:
+        """Retarget the worker count (the control plane's capacity knob):
+        extra workers spawn immediately; excess workers retire as soon as
+        they finish their current batch."""
+        with self._lock:
+            self._target_workers = max(int(n), 1)
+            self.n_workers = self._target_workers
+            if self._started and not self._shutdown:
+                self._spawn_to_target_locked()
+            self._work.notify_all()
 
     def shutdown(self) -> None:
         """Stop the worker threads (pending events are left unsettled)."""
         with self._lock:
             self._shutdown = True
             self._work.notify_all()
-        for t in self._workers:
+        for t in list(self._threads.values()):
             t.join(timeout=5.0)
 
     def now(self) -> float:
@@ -241,10 +471,20 @@ class EngineBackend(Backend):
 
     # -- admission (bounded; sheds on overload) --------------------------
     def submit(self, inv: Invocation) -> None:
-        """Enqueue one event (sheds it as ``rejected`` over ``max_queue``)."""
+        """Enqueue one event (sheds it as ``rejected`` over ``max_queue``,
+        or on an attached control plane's quota/fair-share decision)."""
         if inv.runtime_id not in self.registry:
             raise KeyError(f"unknown runtime {inv.runtime_id!r}")
         inv.r_start = self.now() if inv.r_start is None else inv.r_start
+        if self.controller is not None:
+            # admission runs OUTSIDE the dispatcher lock: the control
+            # plane's tick thread takes its own lock first and then this
+            # one (via the hooks), so nesting the other way would deadlock
+            reason = self.controller.admit(inv, self.now())
+            if reason is not None:
+                with self._lock:
+                    self._reject_locked(inv, err=f"rejected: {reason}")
+                return
         with self._lock:
             if self._shutdown:
                 # no workers will ever serve this — settle it immediately
@@ -365,8 +605,8 @@ class EngineBackend(Backend):
             with self._lock:
                 batch = None
                 while batch is None:
-                    if self._shutdown:
-                        return
+                    if self._shutdown or widx >= self._target_workers:
+                        return      # retired by set_n_workers scale-down
                     batch, key_or_wake = self._pick_locked()
                     if batch is None:
                         timeout = None if key_or_wake is None else \
@@ -409,27 +649,45 @@ class EngineBackend(Backend):
                 self.metrics.record(inv)
 
     # -- execution -------------------------------------------------------
+    def _evict_over_budget_locked(self) -> None:
+        """Drop LRU handles over ``max_warm``, never a pinned key (the
+        control plane's min-warm floors survive LRU pressure)."""
+        while len(self._handles) > self.max_warm:
+            victim = next((k for k in self._handles
+                           if k not in self._pinned), None)
+            if victim is None:
+                break           # everything resident is pinned
+            self._drop_handle_locked(victim)
+
+    def _drop_handle_locked(self, key: str) -> None:
+        self._handles.pop(key, None)
+        self._handle_idle_since.pop(key, None)
+        self._prewarmed.discard(key)
+
     def _acquire_handle(self, rdef: RuntimeDef, key: str):
-        """(handle, cold, err) for one warm instance; LRU insert on cold."""
+        """(handle, cold, prewarmed, err) for one warm instance; LRU
+        insert on cold.  ``prewarmed`` is True on the first hit against a
+        control-plane-installed handle (policy-attributable warmth)."""
         if rdef.setup is None:
             with self._lock:
                 self.n_cold_starts += 1
-            return None, True, None
+            return None, True, False, None
         with self._lock:
             if key in self._handles:
                 self.n_warm_starts += 1
                 self._handles.move_to_end(key)
-                return self._handles[key], False, None
+                prewarmed = key in self._prewarmed
+                self._prewarmed.discard(key)
+                return self._handles[key], False, prewarmed, None
             self.n_cold_starts += 1
         try:
             handle = rdef.setup()           # slow: jit + weights (unlocked)
         except Exception as e:  # noqa: BLE001 — unsuccessful event
-            return None, True, f"cold-start failed: {e!r}"
+            return None, True, False, f"cold-start failed: {e!r}"
         with self._lock:
             self._handles[key] = handle
-            while len(self._handles) > self.max_warm:
-                self._handles.popitem(last=False)
-        return handle, True, None
+            self._evict_over_budget_locked()
+        return handle, True, False, None
 
     def _execute_batch(self, widx: int, batch: List[Invocation]) -> None:
         rdef = self.registry.get(batch[0].runtime_id)
@@ -440,9 +698,10 @@ class EngineBackend(Backend):
             inv.node = f"local/w{widx}"
             inv.accelerator = acc
 
-        handle, cold, err = self._acquire_handle(rdef, key)
+        handle, cold, prewarmed, err = self._acquire_handle(rdef, key)
         for inv in batch:
             inv.cold_start = cold
+            inv.prewarmed = prewarmed
 
         datas = [self.store.get(inv.data_ref)
                  if inv.data_ref in self.store else None for inv in batch]
@@ -475,6 +734,8 @@ class EngineBackend(Backend):
         with self._lock:
             self.n_batches += 1
             self.batch_sizes.append(len(batch))
+            if key in self._handles:
+                self._handle_idle_since[key] = self.now()   # keep-alive TTL
             for inv, inv_err in zip(batch, errs):
                 inv.n_end = inv.e_end
                 inv.r_end = max(self.now(), inv.n_end)
@@ -491,7 +752,7 @@ class EngineBackend(Backend):
         import contextlib
         return contextlib.nullcontext()
 
-    # -- warm-pool introspection ----------------------------------------
+    # -- warm-pool introspection / control-plane actuation ---------------
     def warm_keys(self) -> List[str]:
         """Runtime keys with a live warm instance, LRU-oldest first."""
         with self._lock:
@@ -501,3 +762,128 @@ class EngineBackend(Backend):
         """The warm ``setup()`` handle for ``runtime_key`` (None if cold)."""
         with self._lock:
             return self._handles.get(runtime_key)
+
+    def prewarm(self, runtime_id: str,
+                config: Optional[Dict[str, Any]] = None) -> bool:
+        """Run ``setup()`` (jit + weights) for (runtime, config) off the
+        critical path — called from the control plane's tick thread, never
+        a dispatcher worker — and install the handle in the warm pool.
+        The first event it serves reports ``prewarmed`` instead of paying
+        the cold start.  False when the runtime has no ``setup`` or the
+        key is already warm/in progress."""
+        rdef = self.registry.get(runtime_id)
+        if rdef.setup is None:
+            return False
+        key = runtime_key_for(runtime_id, config)
+        with self._lock:
+            if key in self._handles or key in self._prewarming:
+                return key in self._handles
+            self._prewarming.add(key)
+        try:
+            handle = rdef.setup()           # slow, outside the lock
+        except Exception:   # noqa: BLE001 — prewarm is best-effort
+            with self._lock:
+                self._prewarming.discard(key)
+            return False
+        with self._lock:
+            self._prewarming.discard(key)
+            if key not in self._handles:
+                self._handles[key] = handle
+                self._handle_idle_since[key] = self.now()
+                self._prewarmed.add(key)
+                self.n_prewarms += 1
+                self._evict_over_budget_locked()
+            self._work.notify_all()     # a queued event may now run warm
+        return True
+
+    def evict_warm(self, runtime_key: str) -> bool:
+        """Drop a warm handle (keep-alive TTL expiry / explicit evict)."""
+        with self._lock:
+            hit = runtime_key in self._handles
+            self._drop_handle_locked(runtime_key)
+        return hit
+
+    def pin_warm(self, keys: Set[str]) -> None:
+        """Replace the pinned-key set (min-warm floors)."""
+        with self._lock:
+            self._pinned = set(keys)
+
+    def warm_idle(self) -> Dict[str, float]:
+        """runtime_key -> idle seconds since the handle last served."""
+        now = self.now()
+        with self._lock:
+            return {k: now - self._handle_idle_since.get(k, now)
+                    for k in self._handles}
+
+    def capacity_hooks(self) -> "EngineCapacityHooks":
+        """Control-plane surface over this dispatcher (cached)."""
+        if self._hooks is None:
+            self._hooks = EngineCapacityHooks(self)
+        return self._hooks
+
+
+class EngineCapacityHooks(CapacityHooks):
+    """Control-plane actuation over the engine dispatcher: capacity units
+    are worker threads, the warm pool is the shared ``setup()`` handle
+    LRU, prewarm runs jit + weights on the control plane's tick thread."""
+
+    def __init__(self, engine: EngineBackend):
+        self.engine = engine
+
+    # -- observation -----------------------------------------------------
+    def capacity(self) -> int:
+        """Target dispatcher worker count."""
+        e = self.engine
+        return e._target_workers or e._n_workers_req or 1
+
+    def pending(self) -> int:
+        """Always 0 — worker threads spawn instantly."""
+        return 0
+
+    def queue_depth(self) -> int:
+        """Admitted-but-unclaimed events in the key queues."""
+        with self.engine._lock:
+            return self.engine._n_pending
+
+    def inflight(self) -> int:
+        """Events currently executing on workers."""
+        with self.engine._lock:
+            return self.engine._n_inflight
+
+    def backlog_by_runtime(self) -> Dict[str, int]:
+        """Pending events per runtime across the key queues."""
+        out: Dict[str, int] = {}
+        with self.engine._lock:
+            for kq in self.engine._queues.values():
+                if kq.items:
+                    rid = kq.items[0].runtime_id
+                    out[rid] = out.get(rid, 0) + len(kq.items)
+        return out
+
+    def warm_state(self) -> Dict[str, float]:
+        """Idle seconds per warm handle."""
+        return self.engine.warm_idle()
+
+    def warm_count(self, runtime_key: str) -> int:
+        """1 when the key is warm or prewarming (one handle per key)."""
+        with self.engine._lock:
+            return int(runtime_key in self.engine._handles or
+                       runtime_key in self.engine._prewarming)
+
+    # -- actuation -------------------------------------------------------
+    def set_target(self, n: int) -> None:
+        """Retarget the dispatcher worker count."""
+        self.engine.set_n_workers(n)
+
+    def prewarm(self, runtime_id: str,
+                config: Optional[Dict[str, Any]] = None) -> bool:
+        """Run setup() on the caller's thread, install the warm handle."""
+        return self.engine.prewarm(runtime_id, config)
+
+    def evict(self, runtime_key: str) -> bool:
+        """Drop the key's warm handle."""
+        return self.engine.evict_warm(runtime_key)
+
+    def pin(self, keys: Set[str]) -> None:
+        """Exempt ``keys`` from LRU/TTL eviction."""
+        self.engine.pin_warm(keys)

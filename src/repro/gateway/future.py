@@ -24,8 +24,12 @@ class InvocationError(RuntimeError):
 
 
 class InvocationRejected(InvocationError):
-    """The backend shed this event at admission (bounded-queue
-    backpressure): it never executed.  Retrying later is safe."""
+    """The backend shed this event at admission: it never executed, so
+    retrying later is safe.  Sheds come from the engine's bounded queue
+    (backpressure) or from an attached control plane — per-tenant
+    token-bucket quotas and weighted fair-share limits
+    (``repro.controlplane.admission``); the reason is in
+    ``invocation.error``."""
 
 
 class InvocationFuture:

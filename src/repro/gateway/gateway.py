@@ -52,6 +52,7 @@ class Gateway:
                data_ref: Optional[str] = None,
                config: Optional[Dict[str, Any]] = None,
                at: Optional[float] = None,
+               tenant: Optional[str] = None,
                workflow: Optional[str] = None,
                step: Optional[str] = None) -> InvocationFuture:
         """Submit one event; returns immediately with a future.
@@ -63,11 +64,15 @@ class Gateway:
         sim backend replays arrivals at exactly those times; the engine
         backend starts executing as soon as a worker is free (micro-
         batching compatible events), so there ``at`` only controls the
-        recorded timestamps, not wall-clock delay.  Under backpressure the
-        engine backend may shed the event at admission — the returned
-        future then reports ``rejected()`` and ``result()`` raises
-        :class:`InvocationRejected`.  ``workflow``/``step`` tag the event
-        with its composition provenance (set by the workflow runner).
+        recorded timestamps, not wall-clock delay.  Under backpressure —
+        the engine's bounded queue, or an attached control plane's
+        tenant-quota / fair-share decision — the backend may shed the
+        event at admission: the returned future then reports
+        ``rejected()`` and ``result()`` raises
+        :class:`InvocationRejected`.  ``tenant`` names the submitting
+        tenant for quota accounting (default tenant when omitted).
+        ``workflow``/``step`` tag the event with its composition
+        provenance (set by the workflow runner).
         """
         if payload is not None and data_ref is not None:
             raise ValueError("pass either payload or data_ref, not both")
@@ -78,7 +83,8 @@ class Gateway:
             data_ref = self.put(payload) if payload is not None else ""
         inv = Invocation(runtime_id=runtime_id, data_ref=data_ref,
                          config=dict(config or {}), r_start=at,
-                         workflow=workflow, step=step)
+                         workflow=workflow, step=step,
+                         **({"tenant": tenant} if tenant else {}))
         self.backend.submit(inv)
         fut = InvocationFuture(inv, self.backend)
         self.futures.append(fut)
@@ -87,6 +93,7 @@ class Gateway:
     def map(self, runtime_id: str, payloads: Sequence[Any], *,
             config: Optional[Dict[str, Any]] = None,
             at: Optional[float] = None,
+            tenant: Optional[str] = None,
             spacing_s: float = 0.0) -> List[InvocationFuture]:
         """Fan one runtime out over many payloads (Lithops-style ``map``).
 
@@ -100,7 +107,7 @@ class Gateway:
         for i, payload in enumerate(payloads):
             t = None if at is None else at + i * spacing_s
             futs.append(self.invoke(runtime_id, payload, config=config,
-                                    at=t))
+                                    at=t, tenant=tenant))
         return futs
 
     # -- composition ----------------------------------------------------

@@ -10,16 +10,28 @@ on this host's JAX devices directly (the gateway's engine backend).
 events (each step's prompts are the previous step's generations, resolved
 through the object store — the composition layer demo).
 
+Control-plane flags (``docs/controlplane.md``) attach an SLO scaler
+(``--slo-ms``), warm-pool floors (``--min-warm``) and per-tenant quotas
+(``--tenant-quota NAME=RATE[:BURST]``) over either backend;
+``--metrics-out PATH`` dumps the collector (Prometheus text, or JSON for
+``.json`` paths) after the run.
+
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
         --pods 2 --events 6
     PYTHONPATH=src python -m repro.launch.serve --backend engine \
         --workflow 2 --max-batch 4
+    PYTHONPATH=src python -m repro.launch.serve --backend engine \
+        --min-warm 1 --slo-ms 2000 --tenant-quota free=2:4 \
+        --metrics-out metrics.prom
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 from repro.configs import get_config
+from repro.controlplane import (AdmissionPolicy, ControlPlane,
+                                ControlPlaneConfig, SLOPolicy, WarmPolicy)
 from repro.core.accelerator import AcceleratorSpec
 from repro.core.cluster import Cluster
 from repro.core.runtime import RuntimeDef, SimProfile
@@ -60,6 +72,22 @@ def main(argv=None):
                     help="submit N generate->refine->refine chained "
                          "workflows (one submission each) instead of "
                          "--events flat invocations")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="attach a control plane whose SLO scaler targets "
+                         "this RLat p99 (milliseconds)")
+    ap.add_argument("--min-warm", type=int, default=None, metavar="N",
+                    help="control plane keeps N instances of every "
+                         "registered runtime warm (prewarmed off the "
+                         "critical path, pinned against eviction)")
+    ap.add_argument("--tenant-quota", action="append", default=None,
+                    metavar="NAME=RATE[:BURST]",
+                    help="per-tenant admission quota in events/s (burst "
+                         "defaults to 2*rate); repeatable; over-quota "
+                         "events are shed as rejected")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="after the run, dump the metrics collector to "
+                         "PATH — JSON for .json paths, Prometheus text "
+                         "otherwise")
     args = ap.parse_args(argv)
     if args.backend == "engine":
         if args.sim:
@@ -117,6 +145,34 @@ def main(argv=None):
                                       max_batch=max_batch)
         rt_ids.append(gw.register(rdef))
 
+    plane = None
+    if args.slo_ms is not None or args.min_warm is not None or \
+            args.tenant_quota:
+        quotas = {}
+        for spec_str in args.tenant_quota or []:
+            name, _, rate_s = spec_str.partition("=")
+            if not name or not rate_s:
+                ap.error(f"--tenant-quota {spec_str!r}: expected "
+                         f"NAME=RATE[:BURST]")
+            rate_part, _, burst_part = rate_s.partition(":")
+            rate = float(rate_part)
+            burst = float(burst_part) if burst_part else 2.0 * rate
+            quotas[name] = (rate, burst)
+        plane = ControlPlane(ControlPlaneConfig(
+            tick_interval_s=0.5 if args.backend == "engine" else 5.0,
+            # the sim's pre-provisioned pods are the capacity floor (they
+            # are not drainable); the engine floors at one worker
+            slo=(SLOPolicy(slo_rlat_p99_s=args.slo_ms / 1e3,
+                           min_units=pods if args.backend == "sim" else 1)
+                 if args.slo_ms is not None else None),
+            warm=(WarmPolicy(min_warm={rid: args.min_warm
+                                       for rid in rt_ids})
+                  if args.min_warm is not None else None),
+            admission=(AdmissionPolicy(tenant_quotas=quotas)
+                       if quotas else None),
+        )).attach(gw.backend)
+        plane.start()
+
     cfg_run = {"max_new_tokens": args.max_new_tokens}
     if args.workflow:
         # composition demo: each workflow is a 3-step chain whose steps
@@ -161,13 +217,25 @@ def main(argv=None):
         eb = gw.backend
         sizes = eb.batch_sizes or [0]
         print(f"local: cold={eb.n_cold_starts} warm={eb.n_warm_starts} "
-              f"batches={eb.n_batches} "
+              f"prewarmed={eb.n_prewarms} batches={eb.n_batches} "
               f"max_batch_served={max(sizes)} rejected={eb.n_rejected}")
+    if plane is not None:
+        plane.stop()
+        print(f"controlplane: {plane.summary()}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            if args.metrics_out.endswith(".json"):
+                json.dump(m.to_json(), f, indent=2)
+            else:
+                f.write(m.prometheus_text())
+        print(f"wrote {args.metrics_out}")
     if args.workflow:
         # a retried-then-recovered step leaves its failed attempt in the
         # metrics; the demo's verdict is whether the workflows completed
         return 0 if wf_ok else 1
-    return 0 if ok == len(m.completed) else 1
+    # admission sheds are deliberate policy outcomes, not failures
+    n_shed = sum(1 for i in m.completed if i.rejected)
+    return 0 if ok + n_shed == len(m.completed) else 1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,33 @@
+"""Benchmark harness CLI contract: `--only` rejects unknown section
+names with the valid list instead of silently running nothing."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.run import SECTIONS, main
+
+
+def test_only_rejects_unknown_section(capsys):
+    with pytest.raises(SystemExit) as exc:
+        main(["--only", "nosuchsection"])
+    assert exc.value.code == 2
+    err = capsys.readouterr().err
+    assert "nosuchsection" in err
+    for name, _ in SECTIONS:
+        assert name in err              # the valid list is spelled out
+
+
+def test_only_rejects_typo_mixed_with_valid_sections(capsys):
+    # the dangerous case: one valid token used to mask the typo'd one
+    with pytest.raises(SystemExit) as exc:
+        main(["--only", "gateway,gatway"])
+    assert exc.value.code == 2
+    assert "gatway" in capsys.readouterr().err
+
+
+def test_section_registry_contains_control_plane_sections():
+    names = [n for n, _ in SECTIONS]
+    assert "coldstart" in names and "controlplane" in names

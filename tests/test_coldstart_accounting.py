@@ -1,0 +1,101 @@
+"""Cold-start accounting end to end: `summary()["cold_starts"]` must
+agree between SimBackend and EngineBackend for the same warm/evict
+sequence, and prewarmed invocations must report warm on both."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.controlplane import ControlPlane, ControlPlaneConfig, WarmPolicy
+from repro.core.accelerator import AcceleratorSpec
+from repro.core.cluster import Cluster
+from repro.core.events import runtime_key_for
+from repro.core.runtime import RuntimeDef, SimProfile
+from repro.gateway import EngineBackend, Gateway, SimBackend
+
+ACC = AcceleratorSpec(type="v5e-4x4", slots=1, mem_bytes=16 << 30)
+KEY = runtime_key_for("model", None)
+
+
+def sim_gateway():
+    cl = Cluster(scheduler="warm", seed=0, idle_timeout_s=1e9)
+    cl.add_node("n0", [ACC])
+    gw = Gateway(SimBackend(cl))
+    gw.register(RuntimeDef(
+        runtime_id="model",
+        profiles={"v5e-4x4": SimProfile(elat_median_s=0.5, sigma=0.0,
+                                        cold_start_s=2.0)}))
+    return gw
+
+
+def engine_gateway():
+    eb = EngineBackend(n_workers=1, batch_wait_s=0.0)
+    gw = Gateway(eb)
+    gw.register(RuntimeDef(
+        runtime_id="model",
+        profiles={"host-jax": SimProfile(elat_median_s=0.01)},
+        fn=lambda d, c: {"ok": True}, setup=lambda: {"ready": True}))
+    return gw
+
+
+def run_sequence(gw, evict):
+    """invoke (cold) -> invoke (warm) -> evict -> invoke (cold again)."""
+    cold_flags = []
+    for i in range(2):
+        f = gw.invoke("model", b"\0")
+        f.result(extra_time_s=600.0)
+        cold_flags.append(f.invocation.cold_start)
+    evict()
+    f = gw.invoke("model", b"\0")
+    f.result(extra_time_s=600.0)
+    cold_flags.append(f.invocation.cold_start)
+    return cold_flags
+
+
+def test_summary_cold_starts_agree_across_backends():
+    gw_sim = sim_gateway()
+    sim_flags = run_sequence(
+        gw_sim, evict=lambda: gw_sim.backend.capacity_hooks().evict(KEY))
+
+    gw_eng = engine_gateway()
+    eng_flags = run_sequence(
+        gw_eng, evict=lambda: gw_eng.backend.evict_warm(KEY))
+    gw_eng.backend.shutdown()
+
+    assert sim_flags == eng_flags == [True, False, True]
+    s_sim, s_eng = gw_sim.summary(), gw_eng.summary()
+    assert s_sim["cold_starts"] == s_eng["cold_starts"] == 2
+    assert s_sim["n_completed"] == s_eng["n_completed"] == 3
+    # per-backend counters agree with the per-invocation flags too
+    node = gw_sim.backend.cluster.nodes[0]
+    assert node.n_cold_starts == gw_eng.backend.n_cold_starts == 2
+    assert node.n_warm_starts == gw_eng.backend.n_warm_starts == 1
+
+
+def test_prewarmed_invocations_report_warm_on_both_backends():
+    cfg = ControlPlaneConfig(tick_interval_s=0.1,
+                             warm=WarmPolicy(min_warm={"model": 1}))
+
+    gw_sim = sim_gateway()
+    plane_sim = ControlPlane(cfg).attach(gw_sim.backend, spec=ACC)
+    plane_sim.start()
+    # arrival at t=5, past the 2 s prewarm install
+    f_sim = gw_sim.invoke("model", b"\0", at=5.0)
+    f_sim.result(extra_time_s=600.0)
+    plane_sim.stop()
+
+    gw_eng = engine_gateway()
+    plane_eng = ControlPlane(cfg).attach(gw_eng.backend)
+    plane_eng.tick()                # deterministic: one manual tick
+    f_eng = gw_eng.invoke("model", b"\0")
+    f_eng.result(extra_time_s=10.0)
+    plane_eng.detach()
+    gw_eng.backend.shutdown()
+
+    for f in (f_sim, f_eng):
+        assert not f.invocation.cold_start
+        assert f.invocation.prewarmed
+    assert gw_sim.summary()["cold_starts"] == 0
+    assert gw_eng.summary()["cold_starts"] == 0
+    assert gw_sim.summary()["prewarmed"] == 1
+    assert gw_eng.summary()["prewarmed"] == 1

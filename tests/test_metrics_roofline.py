@@ -92,3 +92,57 @@ def test_roofline_report_terms():
     assert r.dominant == "collective"
     assert abs(r.useful_ratio - 0.5) < 1e-9
     assert abs(r.mfu - 0.25) < 1e-9
+
+
+def test_percentile_nearest_rank_unbiased():
+    """Regression: `int(p/100*n)` rounded ranks UP, so p50 of [1, 2]
+    returned 2; nearest-rank is `ceil(p/100*n) - 1` (p50 of [1, 2] = 1)."""
+    m = MetricsCollector()
+    assert m.percentile([1.0, 2.0], 50) == 1.0
+    assert m.percentile([1.0, 2.0, 3.0], 50) == 2.0
+    assert m.percentile([1.0, 2.0, 3.0, 4.0], 25) == 1.0
+    assert m.percentile([1.0, 2.0, 3.0, 4.0], 75) == 3.0
+    vals = [float(i) for i in range(1, 101)]
+    assert m.percentile(vals, 50) == 50.0
+    assert m.percentile(vals, 99) == 99.0
+    assert m.percentile(vals, 100) == 100.0
+    assert m.percentile(vals, 0) == 1.0
+    assert m.percentile([7.0], 99) == 7.0
+    assert m.percentile([], 50) is None
+
+
+def test_window_queries():
+    m = MetricsCollector()
+    for i in range(10):
+        m.record(done_inv(float(i), 1.0))
+    in_window = m.window(5.0, 8.0)
+    assert all(5.0 <= inv.r_end <= 8.0 for inv in in_window)
+    assert len(in_window) == 3
+    assert len(m.window(0.0, runtime_id="r")) == 10
+    assert m.window(0.0, runtime_id="other") == []
+    assert len(m.since(7)) == 3
+
+
+def test_to_json_and_prometheus_text():
+    m = MetricsCollector()
+    m.record(done_inv(0.0, 1.0))
+    m.record(done_inv(1.0, 2.0))
+    rej = Invocation(runtime_id="r", data_ref="d", r_start=3.0,
+                     tenant="capped")
+    rej.n_start = rej.e_start = rej.e_end = rej.n_end = rej.r_end = 3.0
+    rej.rejected = True
+    m.record(rej)
+
+    d = m.to_json()
+    assert d["summary"]["n_completed"] == 3
+    assert d["summary"]["rejected"] == 1
+    assert d["per_runtime"]["r"]["r_success"] == 2
+    assert d["per_tenant"]["capped"]["rejected"] == 1
+    import json
+    json.dumps(d)                       # fully serializable
+
+    text = m.prometheus_text()
+    assert "# TYPE hardless_rlat_p50 gauge" in text
+    assert "hardless_n_completed 3" in text
+    assert 'hardless_runtime_r_success{runtime="r"} 2' in text
+    assert 'hardless_tenant_rejected{tenant="capped"} 1' in text
