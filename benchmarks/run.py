@@ -168,6 +168,31 @@ def _sec_controlplane() -> Dict[str, Any]:
     return p
 
 
+def _sec_faults() -> Dict[str, Any]:
+    # --- reliability: goodput under fault schedules vs no-retry ---------
+    from benchmarks.bench_faults import bench as faults_bench
+    t0 = time.perf_counter()
+    f = faults_bench(real=True)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(f), 1)
+    k = f["sim/node_kill"]
+    _row("faults_sim_node_kill", us,
+         f"goodput={k['goodput']}/{k['submitted']} "
+         f"(noretry {k['goodput_noretry']}) retried={k['retried']} "
+         f"all_settled={int(k['all_settled'])}")
+    if "engine/worker_crash" in f:
+        e = f["engine/worker_crash"]
+        _row("faults_engine_worker_crash", us,
+             f"goodput={e['goodput']}/{e['submitted']} "
+             f"crashes={e['worker_crashes']} retried={e['retried']} "
+             f"all_settled={int(e['all_settled'])}")
+        w = f["workflow/resume"]
+        _row("faults_workflow_resume", us,
+             f"parent_reruns={w['parent_reruns']} "
+             f"failed_step_runs={w['failed_step_runs']} "
+             f"only_failed_rerun={int(w['only_failed_rerun'])}")
+    return f
+
+
 def _sec_serving() -> Dict[str, Any]:
     # --- serving engine (real JAX execution) ----------------------------
     from benchmarks.bench_serving import bench as serving_bench
@@ -206,6 +231,7 @@ SECTIONS: List[Tuple[str, Callable[[], Dict[str, Any]]]] = [
     ("workflow", _sec_workflow),
     ("coldstart", _sec_coldstart),
     ("controlplane", _sec_controlplane),
+    ("faults", _sec_faults),
     ("serving", _sec_serving),
     ("roofline", _sec_roofline),
 ]

@@ -57,7 +57,7 @@ cluster.run(until=100_000.0)
 
 print(f"events completed: {len(cluster.metrics.completed)}")
 for inv in cluster.metrics.completed:
-    res = cluster.store.get(inv.result_ref)
+    res = cluster.store.get_outcome(inv.result_ref)["value"]
     print(f"  event {inv.inv_id}: rt={inv.runtime_id} acc={inv.accelerator} "
           f"cold={inv.cold_start} ELat={inv.elat:.2f}s "
           f"outputs={[len(o) for o in res['outputs']]} tokens")

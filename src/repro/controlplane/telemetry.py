@@ -47,6 +47,7 @@ class RuntimeStats:
     rlat_p99: Optional[float]
     elat_p50: Optional[float]
     cold_ratio: float           # cold starts / successes in the window
+    failure_rate: float         # failed (not shed) settlements/s in window
 
 
 @dataclasses.dataclass
@@ -61,6 +62,10 @@ class TelemetrySnapshot:
     arrival_rate: float         # aggregate offered events/s
     rlat_p99: Optional[float]   # aggregate over the window
     cold_ratio: float           # aggregate over the window
+    # failed (not shed) settlements/s over the window — lost deliveries
+    # and execution failures; the scaler's capacity math must not treat a
+    # failure-churning platform as healthy throughput
+    failure_rate: float = 0.0
     per_runtime: Dict[str, RuntimeStats] = dataclasses.field(
         default_factory=dict)
 
@@ -128,7 +133,7 @@ class TelemetryBus:
         per: Dict[str, RuntimeStats] = {}
         all_rl: List[float] = []
         total_rate = 0.0
-        agg_cold = agg_ok = 0
+        agg_cold = agg_ok = agg_failed = 0
         rids = set(self._arrivals) | set(self._completed) | set(backlog)
         for rid in sorted(rids):
             rate = len(self._arrivals.get(rid, ())) / window
@@ -136,6 +141,8 @@ class TelemetryBus:
                 (1.0 - self.cfg.ewma_alpha) * self._ewma.get(rid, rate)
             self._ewma[rid] = ewma
             done = [i for i in self._completed.get(rid, ()) if i.success]
+            failed = sum(1 for i in self._completed.get(rid, ())
+                         if not i.success and not i.rejected)
             rl = [i.rlat for i in done if i.rlat is not None]
             el = [i.elat for i in done if i.elat is not None]
             cold = sum(1 for i in done if i.cold_start)
@@ -143,17 +150,20 @@ class TelemetryBus:
             total_rate += rate
             agg_cold += cold
             agg_ok += len(done)
+            agg_failed += failed
             per[rid] = RuntimeStats(
                 runtime_id=rid, arrival_rate=rate, ewma_rate=ewma,
                 queue_depth=backlog.get(rid, 0), n_completed=len(done),
                 rlat_p50=self._pct(rl, 50), rlat_p99=self._pct(rl, 99),
                 elat_p50=self._pct(el, 50),
-                cold_ratio=cold / len(done) if done else 0.0)
+                cold_ratio=cold / len(done) if done else 0.0,
+                failure_rate=failed / window)
         snap = TelemetrySnapshot(
             t=now, capacity=hooks.capacity(), pending_capacity=hooks.pending(),
             queue_depth=hooks.queue_depth(), inflight=hooks.inflight(),
             arrival_rate=total_rate, rlat_p99=self._pct(all_rl, 99),
             cold_ratio=agg_cold / agg_ok if agg_ok else 0.0,
+            failure_rate=agg_failed / window,
             per_runtime=per)
         self.history.append(snap)
         return snap

@@ -8,7 +8,10 @@ GPU, a VPU stick, or — in the TPU adaptation — a pod mesh *slice*.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, Optional, Set
+import logging
+from typing import Dict, FrozenSet, List, Set
+
+log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +37,9 @@ class Accelerator:
     prewarmed: Set[str] = dataclasses.field(default_factory=set)
     total_busy_time: float = 0.0   # for utilization accounting
     n_executions: int = 0
+    # mark_warm calls that could not evict down to max_warm because every
+    # other resident key was pinned (min-warm floors exceed the budget)
+    n_pin_overflows: int = 0
 
     @property
     def free_slots(self) -> int:
@@ -51,20 +57,30 @@ class Accelerator:
         self.busy_slots -= 1
 
     def mark_warm(self, runtime_key: str, now: float, max_warm: int = 4,
-                  pinned: FrozenSet[str] = frozenset()) -> Optional[str]:
-        """Register a warm instance; returns an evicted key (LRU) if over
-        the memory budget.  ``pinned`` keys (control-plane min-warm
-        floors) are never the eviction victim."""
+                  pinned: FrozenSet[str] = frozenset()) -> List[str]:
+        """Register a warm instance; returns the keys evicted (LRU-first)
+        to get back within the ``max_warm`` memory budget.  ``pinned``
+        keys (control-plane min-warm floors) are never eviction victims;
+        when pins alone exceed the budget, the overflow is surfaced
+        (``n_pin_overflows`` counter + warning log) instead of silently
+        growing the warm set without bound."""
         self.warm[runtime_key] = now
-        if len(self.warm) > max_warm:
+        evicted: List[str] = []
+        while len(self.warm) > max_warm:
             victims = [k for k in self.warm
                        if k != runtime_key and k not in pinned]
-            if victims:
-                lru = min(victims, key=self.warm.get)
-                del self.warm[lru]
-                self.prewarmed.discard(lru)
-                return lru
-        return None
+            if not victims:
+                self.n_pin_overflows += 1
+                log.warning(
+                    "%s: warm set (%d) exceeds max_warm=%d but every other "
+                    "resident key is pinned — min-warm floors exceed the "
+                    "memory budget", self.local_id, len(self.warm), max_warm)
+                break
+            lru = min(victims, key=self.warm.get)
+            del self.warm[lru]
+            self.prewarmed.discard(lru)
+            evicted.append(lru)
+        return evicted
 
     def evict(self, runtime_key: str) -> None:
         self.warm.pop(runtime_key, None)

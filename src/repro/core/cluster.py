@@ -36,9 +36,9 @@ class Cluster:
     def __init__(self, *, scheduler: str = "warm", clock=None,
                  invocation_timeout_s: Optional[float] = None,
                  idle_timeout_s: float = 60.0, max_warm: int = 4,
-                 seed: int = 0):
+                 lease_s: float = 60.0, seed: int = 0):
         self.clock = clock or SimClock()
-        self.queue = ScannableQueue()
+        self.queue = ScannableQueue(lease_s=lease_s)
         self.store = ObjectStore()
         self.registry = RuntimeRegistry()
         self.metrics = MetricsCollector()
@@ -49,6 +49,12 @@ class Cluster:
         self._max_warm = max_warm
         self._seed = seed
         self._horizon = 0.0          # latest submitted r_start (drain bound)
+        # at-least-once: requeue a lost delivery up to the runtime's
+        # max_attempts; past that it settles as a permanent error record
+        self.queue.configure_retries(
+            lambda inv: (self.registry.get(inv.runtime_id).max_attempts
+                         if inv.runtime_id in self.registry else 1),
+            self._fail_lost)
 
     # -- topology -------------------------------------------------------
     def add_node(self, name: str, specs: Sequence[AcceleratorSpec]
@@ -87,6 +93,16 @@ class Cluster:
             else:
                 self.queue.publish(inv, inv.r_start)
         self.clock.call_at(inv.r_start, publish)
+
+    def _fail_lost(self, inv: Invocation, reason: str) -> None:
+        """Settle an event whose delivery was lost past its retry bound —
+        the permanent "retries exhausted" error record (none stranded)."""
+        inv.clear_attempt_timestamps()      # the dead attempt's chain
+        inv.r_end = max(self.clock.now(), inv.r_start or 0.0)
+        inv.success = False
+        inv.error = reason
+        self.store.persist_outcome(inv, None, reason)
+        self.metrics.record(inv)
 
     def _shed(self, inv: Invocation, reason: str) -> None:
         """Settle an admission-shed event as rejected (never executed)."""

@@ -56,6 +56,14 @@ class Invocation:
     prewarmed: bool = False             # served by a control-plane-prewarmed
     #                                     instance (policy-attributable warmth)
 
+    # --- at-least-once delivery (leases / retry) ---
+    # completed-or-lost execution attempts so far (0 = first try); bumped
+    # by the queue's lease reaper / engine worker monitor on requeue
+    attempt: int = 0
+    # the event was requeued until its RuntimeDef.max_attempts bound and
+    # still never completed — settled as a permanent error record
+    retries_exhausted: bool = False
+
     # --- multi-tenancy (admission control groups events by tenant) ---
     tenant: str = DEFAULT_TENANT
 
@@ -87,6 +95,21 @@ class Invocation:
     def dlat(self) -> Optional[float]:
         """Delivery latency: submit to execution start (EStart - RStart)."""
         return None if self.e_start is None else self.e_start - self.r_start
+
+    def clear_attempt_timestamps(self) -> None:
+        """Drop the per-attempt timestamps and placement of a lost attempt
+        (keeps ``r_start`` — the client submitted once) so the next
+        delivery records a fresh, monotone §V-A chain."""
+        self.n_start = self.e_start = self.e_end = self.n_end = None
+        self.node = self.accelerator = None
+        self.cold_start = False
+        self.prewarmed = False
+
+    def reset_for_retry(self) -> None:
+        """Prepare a lost invocation for redelivery: wipe the dead
+        attempt's timestamps and count it (``attempt`` += 1)."""
+        self.clear_attempt_timestamps()
+        self.attempt += 1
 
     def check_monotone(self) -> bool:
         """True when every reached timestamp respects the §V-A ordering."""

@@ -113,6 +113,14 @@ class MetricsCollector:
             "cold_starts": sum(1 for i in self.completed if i.cold_start),
             "prewarmed": sum(1 for i in self.completed if i.prewarmed),
             "rejected": sum(1 for i in self.completed if i.rejected),
+            # failure-path accounting (at-least-once delivery):
+            # failed = settled unsuccessfully after actually being tried
+            # (sheds are a deliberate policy outcome, counted separately)
+            "failed": sum(1 for i in self.completed
+                          if not i.success and not i.rejected),
+            "retried": sum(i.attempt for i in self.completed),
+            "retries_exhausted": sum(1 for i in self.completed
+                                     if i.retries_exhausted),
         }
 
     # -- machine-readable dumps (ops tooling / --metrics-out) -----------
@@ -133,6 +141,11 @@ class MetricsCollector:
                 "cold_starts": sum(1 for i in invs if i.cold_start),
                 "prewarmed": sum(1 for i in invs if i.prewarmed),
                 "rejected": sum(1 for i in invs if i.rejected),
+                "failed": sum(1 for i in invs
+                              if not i.success and not i.rejected),
+                "retried": sum(i.attempt for i in invs),
+                "retries_exhausted": sum(1 for i in invs
+                                         if i.retries_exhausted),
             }
         return out
 
@@ -172,7 +185,11 @@ class MetricsCollector:
                 ("elat_p50", "execution latency p50 (s)"),
                 ("cold_starts", "invocations that paid a cold start"),
                 ("prewarmed", "invocations served by a prewarmed instance"),
-                ("rejected", "invocations shed at admission")):
+                ("rejected", "invocations shed at admission"),
+                ("failed", "invocations settled unsuccessfully (not shed)"),
+                ("retried", "redeliveries after lost attempts"),
+                ("retries_exhausted",
+                 "invocations that ran out of delivery attempts")):
             lines.append(f"# HELP {prefix}_{name} {help_txt}")
             lines.append(f"# TYPE {prefix}_{name} gauge")
             lines.append(f"{prefix}_{name} {s[name]}")

@@ -16,7 +16,7 @@ from repro.core.events import Invocation
 from repro.core.queue import ScannableQueue
 from repro.core.runtime import RuntimeRegistry
 from repro.core.scheduler import Scheduler, WarmAffinityScheduler
-from repro.core.storage import ObjectStore
+from repro.core.storage import ObjectStore, unwrap_outcome
 
 PICKUP_LATENCY_S = 0.003     # queue -> node RPC
 CLIENT_NOTIFY_S = 0.002      # node -> client completion signal
@@ -47,6 +47,9 @@ class NodeManager:
         self.n_prewarms = 0
         self.draining = False        # set by the autoscaler: finish current
         #                              work, take no new events
+        self.dead = False            # fault injection: node crashed — its
+        #                              in-flight work is lost (lease requeue)
+        self.stalled_until = -1.0    # fault injection: hung until this time
         self.pinned: Set[str] = set()    # min-warm keys exempt from eviction
         self._real_handles: Dict[str, object] = {}   # runtime_key -> setup()
         queue.subscribe(self._on_publish)
@@ -61,9 +64,38 @@ class NodeManager:
         self.clock.call_in(0.0, self.try_start_work)
 
     # ------------------------------------------------------------------
+    # -- fault injection (repro.core.faults drives these) ----------------
+    def kill(self) -> None:
+        """Crash this node: in-flight work is lost (the fault injector
+        requeues its leases), warm instances and slot state are gone, and
+        it never takes another event.  ``draining`` is set too so fleet /
+        capacity accounting stops counting the corpse."""
+        self.dead = True
+        self.draining = True
+        for acc in self.accelerators:
+            acc.busy_slots = 0
+            acc.warm.clear()
+            acc.prewarmed.clear()
+        self._real_handles.clear()
+
+    def stall(self, duration_s: float) -> None:
+        """Hang this node for ``duration_s``: it takes no new events and
+        completes nothing until the stall ends — long stalls expire the
+        visibility leases of its in-flight work, which redelivers the
+        events elsewhere (a late completion after redelivery is dropped:
+        first settlement wins)."""
+        now = self.clock.now()
+        self.stalled_until = max(self.stalled_until, now + duration_s)
+        self.clock.call_at(self.stalled_until, self.try_start_work)
+
+    @property
+    def stalled(self) -> bool:
+        return self.clock.now() < self.stalled_until
+
+    # ------------------------------------------------------------------
     def try_start_work(self) -> None:
         """Pull work while capacity remains (paper Fig. 1 select loop)."""
-        if self.draining:
+        if self.draining or self.dead or self.stalled:
             return
         while True:
             picked = self.scheduler.pick(self.queue, self, self.clock.now())
@@ -100,10 +132,9 @@ class NodeManager:
             acc.prewarmed.discard(inv.runtime_key)
         else:
             self.n_cold_starts += 1
-            evicted = acc.mark_warm(inv.runtime_key, now, self.max_warm,
-                                    pinned=self.pinned)
-            if evicted and evicted in self._real_handles:
-                del self._real_handles[evicted]
+            for victim in acc.mark_warm(inv.runtime_key, now, self.max_warm,
+                                        pinned=self.pinned):
+                self._real_handles.pop(victim, None)
 
         # stateless: fetch the data set before running (§IV-A)
         fetch = (self.store.transfer_time(inv.data_ref)
@@ -112,7 +143,8 @@ class NodeManager:
 
         if rdef.fn is not None:
             # real execution: run now (simulation time advances by wall time)
-            data = self.store.get(inv.data_ref) if inv.data_ref in self.store else None
+            data = unwrap_outcome(self.store.get(inv.data_ref)) \
+                if inv.data_ref in self.store else None
             if not warm and rdef.setup is not None and \
                     inv.runtime_key not in self._real_handles:
                 self._real_handles[inv.runtime_key] = rdef.setup()
@@ -135,7 +167,24 @@ class NodeManager:
     # ------------------------------------------------------------------
     def _complete(self, inv: Invocation, acc: Accelerator,
                   result, err: Optional[str]) -> None:
+        if self.dead:
+            return          # the crash lost this work; leases redeliver it
         now = self.clock.now()
+        if self.stalled:
+            # the node is hung: nothing completes until the stall ends
+            self.clock.call_at(self.stalled_until,
+                               lambda: self._complete(inv, acc, result, err))
+            return
+        if inv.r_end is not None or \
+                self.queue.holder_of(inv.inv_id) != self.name:
+            # our visibility lease was reaped (the event was redelivered —
+            # and possibly already settled — elsewhere): this is an
+            # at-least-once duplicate completion.  Drop it and free the
+            # slot; the settlement of record belongs to the new holder.
+            acc.release()
+            self.try_start_work()
+            return
+        self.queue.ack(inv.inv_id)
         inv.e_end = now
         rdef = self.registry.get(inv.runtime_id)
         prof = rdef.profiles[acc.spec.type]
@@ -146,10 +195,10 @@ class NodeManager:
             err = "timeout-at-completion"
         inv.error = err
         inv.success = err is None
-        # persist the outcome in object storage (§IV-A: results land in the
-        # store; gateway futures poll this key for completion) — the failure
-        # record, not the payload, when the event did not succeed
-        self.store.persist_outcome(inv, result if err is None else None, err)
+        # persist the outcome envelope in object storage (§IV-A: results
+        # land in the store; gateway futures poll this key) — a failure
+        # keeps its partial result alongside the error
+        self.store.persist_outcome(inv, result, err)
         acc.mark_warm(inv.runtime_key, now, self.max_warm,
                       pinned=self.pinned)
         acc.total_busy_time += inv.e_end - (inv.e_start or now)
@@ -161,7 +210,8 @@ class NodeManager:
 
         # paper behaviour: immediately look for a SAME-configuration event
         # to reuse the live instance, then fall back to the general loop.
-        match = (self.queue.take_matching(inv.runtime_key, now)
+        match = (self.queue.take_matching(inv.runtime_key, now,
+                                          holder=self.name)
                  if getattr(self.scheduler, "reuse_on_complete", True)
                  and not self.draining else None)
         if match is not None:
@@ -177,6 +227,7 @@ class NodeManager:
 
     def _fail(self, inv: Invocation, reason: str) -> None:
         now = self.clock.now()
+        self.queue.ack(inv.inv_id)      # we hold the lease from the take
         inv.n_start = inv.n_start or now
         inv.r_end = now
         inv.success = False
@@ -204,10 +255,9 @@ class NodeManager:
         def ready():
             if self.draining or acc.has_warm(runtime_key):
                 return
-            evicted = acc.mark_warm(runtime_key, self.clock.now(),
-                                    self.max_warm, pinned=self.pinned)
-            if evicted and evicted in self._real_handles:
-                del self._real_handles[evicted]
+            for victim in acc.mark_warm(runtime_key, self.clock.now(),
+                                        self.max_warm, pinned=self.pinned):
+                self._real_handles.pop(victim, None)
             acc.prewarmed.add(runtime_key)
             if setup is not None and runtime_key not in self._real_handles:
                 self._real_handles[runtime_key] = setup()

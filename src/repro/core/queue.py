@@ -10,22 +10,57 @@ The two operations the paper requires of the queue:
 
 Plus ``scan()`` — nodes may inspect the queue *before* taking invocations
 (cold-start-avoiding scheduling policies are built on this).
+
+At-least-once delivery: taking an event grants the taker a **visibility
+lease** (``lease_s``).  A lease that is never acked — the node died, the
+worker crashed, the node stalled past the lease — is *reaped*: the
+invocation is requeued at the head of the queue with ``attempt`` bumped,
+bounded by the per-runtime retry policy (``RuntimeDef.max_attempts`` via
+``configure_retries``); an exhausted event settles as a permanent error
+record through ``fail_fn`` instead of being redelivered forever.  Work
+survives the node that picked it up.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import OrderedDict
 from typing import Callable, Iterable, List, Optional, Set
 
 from repro.core.events import Invocation
 
+DEFAULT_LEASE_S = 60.0
+
+
+@dataclasses.dataclass
+class Lease:
+    """One in-flight delivery: who holds the event and until when."""
+    inv: Invocation
+    holder: str
+    expires_at: float
+
 
 class ScannableQueue:
-    def __init__(self):
+    def __init__(self, lease_s: float = DEFAULT_LEASE_S):
         self._events: "OrderedDict[int, Invocation]" = OrderedDict()
         self._subscribers: List[Callable[[], None]] = []
+        self._leased: "OrderedDict[int, Lease]" = OrderedDict()
+        self.lease_s = lease_s
         self.n_published = 0
         self.n_taken = 0
+        self.n_requeued = 0         # lost deliveries put back (at-least-once)
+        self.n_exhausted = 0        # events that ran out of attempts
         self.depth_timeline: List[tuple] = []   # (t, depth) samples
+        # retry policy seams, wired by the cluster: max total attempts for
+        # an event (per-RuntimeDef), and the permanent-failure settle path
+        self._retry_limit_fn: Optional[Callable[[Invocation], int]] = None
+        self._fail_fn: Optional[Callable[[Invocation, str], None]] = None
+
+    def configure_retries(self, retry_limit_fn: Callable[[Invocation], int],
+                          fail_fn: Callable[[Invocation, str], None]) -> None:
+        """Wire the retry bound (max attempts per event) and the
+        permanent-failure settle path used when a lost event exhausts it."""
+        self._retry_limit_fn = retry_limit_fn
+        self._fail_fn = fail_fn
 
     # -- publishing ------------------------------------------------------
     def publish(self, inv: Invocation, now: Optional[float] = None) -> None:
@@ -45,33 +80,108 @@ class ScannableQueue:
         """Read-only view in arrival order (the paper's queue-scan)."""
         return self._events.values()
 
-    def _take(self, inv_id: int, now: Optional[float]) -> Invocation:
+    def _take(self, inv_id: int, now: Optional[float],
+              holder: Optional[str]) -> Invocation:
         inv = self._events.pop(inv_id)
         self.n_taken += 1
+        t = now if now is not None else 0.0
+        self._leased[inv_id] = Lease(inv, holder or "<unknown>",
+                                     t + self.lease_s)
         if now is not None:
             self.depth_timeline.append((now, len(self._events)))
         return inv
 
-    def take_any(self, supported: Set[str],
-                 now: Optional[float] = None) -> Optional[Invocation]:
+    def take_any(self, supported: Set[str], now: Optional[float] = None,
+                 holder: Optional[str] = None) -> Optional[Invocation]:
         for inv in self._events.values():
             if inv.runtime_id in supported:
-                return self._take(inv.inv_id, now)
+                return self._take(inv.inv_id, now, holder)
         return None
 
-    def take_matching(self, runtime_key: str,
-                      now: Optional[float] = None) -> Optional[Invocation]:
+    def take_matching(self, runtime_key: str, now: Optional[float] = None,
+                      holder: Optional[str] = None) -> Optional[Invocation]:
         for inv in self._events.values():
             if inv.runtime_key == runtime_key:
-                return self._take(inv.inv_id, now)
+                return self._take(inv.inv_id, now, holder)
         return None
 
     def take_where(self, pred: Callable[[Invocation], bool],
-                   now: Optional[float] = None) -> Optional[Invocation]:
+                   now: Optional[float] = None,
+                   holder: Optional[str] = None) -> Optional[Invocation]:
         for inv in self._events.values():
             if pred(inv):
-                return self._take(inv.inv_id, now)
+                return self._take(inv.inv_id, now, holder)
         return None
+
+    # -- leases (at-least-once delivery) ---------------------------------
+    @property
+    def n_leased(self) -> int:
+        """In-flight deliveries (taken, not yet acked)."""
+        return len(self._leased)
+
+    def holder_of(self, inv_id: int) -> Optional[str]:
+        """Who currently holds the event's lease (None when not leased)."""
+        lease = self._leased.get(inv_id)
+        return lease.holder if lease is not None else None
+
+    def ack(self, inv_id: int) -> bool:
+        """Release an event's lease on settlement; True when it was held.
+        An unacked lease eventually expires and redelivers the event."""
+        return self._leased.pop(inv_id, None) is not None
+
+    def discard(self, inv_id: int) -> bool:
+        """Remove a (re)queued event without delivering it — the original
+        taker settled it after its lease had already expired (at-least-once
+        duplicate suppression: first settlement wins)."""
+        return self._events.pop(inv_id, None) is not None
+
+    def reap(self, now: float) -> List[Invocation]:
+        """Requeue every expired lease; returns the redelivered events.
+        Exhausted events settle as permanent failures via ``fail_fn``."""
+        expired = [lease for lease in self._leased.values()
+                   if lease.expires_at <= now]
+        return self._redeliver(expired, now, "lease expired")
+
+    def release_holder(self, holder: str,
+                       now: Optional[float] = None) -> List[Invocation]:
+        """Requeue every lease held by ``holder`` immediately — crash
+        recovery when a node is known dead (no need to wait out the
+        lease); returns the redelivered events."""
+        lost = [lease for lease in self._leased.values()
+                if lease.holder == holder]
+        return self._redeliver(lost, now, f"node {holder!r} lost")
+
+    def _redeliver(self, leases: List[Lease], now: Optional[float],
+                   reason: str) -> List[Invocation]:
+        requeued: List[Invocation] = []
+        for lease in leases:
+            del self._leased[lease.inv.inv_id]
+            inv = lease.inv
+            if inv.r_end is not None:
+                continue            # settled late without ack — just drop
+            limit = self._retry_limit_fn(inv) if self._retry_limit_fn \
+                else 1
+            if inv.attempt + 1 < limit:
+                inv.reset_for_retry()
+                self._events[inv.inv_id] = inv
+                # retries go to the head: the event has already waited a
+                # full lease longer than anything behind it
+                self._events.move_to_end(inv.inv_id, last=False)
+                self.n_requeued += 1
+                requeued.append(inv)
+            else:
+                inv.retries_exhausted = True
+                self.n_exhausted += 1
+                msg = (f"retries exhausted after {inv.attempt + 1} "
+                       f"attempt(s): {reason}")
+                if self._fail_fn is not None:
+                    self._fail_fn(inv, msg)
+        if requeued:
+            if now is not None:
+                self.depth_timeline.append((now, len(self._events)))
+            for fn in list(self._subscribers):
+                fn()
+        return requeued
 
     def __len__(self) -> int:
         return len(self._events)

@@ -72,6 +72,11 @@ class RuntimeDef:
     # payload so a jitted batch_fn only ever sees these leading batch
     # shapes (bounded jit cache); results past ``n_real`` are discarded.
     batch_buckets: Optional[Tuple[int, ...]] = None
+    # at-least-once retry policy: total times one event may be *started*
+    # before a lost delivery (node death, worker crash, expired lease)
+    # settles as a permanent ``retries exhausted`` error record.
+    # 1 = at-most-once (no redelivery); default allows two redeliveries.
+    max_attempts: int = 3
     # control-plane warm-pool hints (a WarmPolicy overrides them):
     # keep at least this many instances resident (prewarmed on attach) ...
     min_warm: int = 0

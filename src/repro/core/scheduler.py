@@ -51,7 +51,8 @@ class FifoScheduler(Scheduler):
                 continue
             accs = self._candidates(node, inv)
             if accs:
-                queue.take_where(lambda e: e.inv_id == inv.inv_id, now)
+                queue.take_where(lambda e: e.inv_id == inv.inv_id, now,
+                                 holder=node.name)
                 return inv, accs[0]
         return None
 
@@ -70,7 +71,8 @@ class WarmAffinityScheduler(Scheduler):
             warm = [a for a in self._candidates(node, inv)
                     if a.has_warm(inv.runtime_key)]
             if warm:
-                queue.take_where(lambda e: e.inv_id == inv.inv_id, now)
+                queue.take_where(lambda e: e.inv_id == inv.inv_id, now,
+                                 holder=node.name)
                 return inv, warm[0]
         # pass 2: oldest runnable
         for inv in queue.scan():
@@ -78,7 +80,8 @@ class WarmAffinityScheduler(Scheduler):
                 continue
             accs = self._candidates(node, inv)
             if accs:
-                queue.take_where(lambda e: e.inv_id == inv.inv_id, now)
+                queue.take_where(lambda e: e.inv_id == inv.inv_id, now,
+                                 holder=node.name)
                 return inv, accs[0]
         return None
 
@@ -107,7 +110,8 @@ class CostAwareScheduler(Scheduler):
         if best is None:
             return None
         _, inv, acc = best
-        queue.take_where(lambda e: e.inv_id == inv.inv_id, now)
+        queue.take_where(lambda e: e.inv_id == inv.inv_id, now,
+                         holder=node.name)
         return inv, acc
 
 

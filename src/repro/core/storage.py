@@ -4,17 +4,56 @@ Content-addressed blob store holding runtime definitions, input data and
 results.  Fetch/put latency follows a simple bandwidth + RTT model on the
 cluster clock — the component that turns "stateless workloads must fetch
 data sets before running" (§IV-A) into measurable delivery delay (DLat).
+
+Outcome records are stored as explicit envelopes (see
+:func:`make_outcome` / :func:`unwrap_outcome`): ``{"ok": bool, "value":
+..., "error": ...}`` plus provenance, so a runtime that legitimately
+returns ``None`` is distinguishable from bookkeeping, and a failure can
+carry a partial result without dropping the error.
 """
 from __future__ import annotations
 
 import hashlib
 import pickle
-from typing import Any, Dict, Optional, Sequence
+from typing import Any, Dict, Optional, Sequence, Set
+
+# reserved marker key identifying an outcome envelope in the store (the
+# value namespace is the user's; a dict with this key is always ours)
+OUTCOME_MARK = "__hardless_outcome__"
+
+
+def make_outcome(inv, result: Any, err: Optional[str]) -> Dict[str, Any]:
+    """Build the explicit outcome envelope for one settled invocation.
+
+    ``value`` is kept even when ``err`` is set (a failure may carry a
+    partial result); ``ok`` alone decides success.
+    """
+    return {
+        OUTCOME_MARK: True,
+        "ok": err is None,
+        "value": result,
+        "error": err,
+        "inv_id": inv.inv_id,
+        "attempt": inv.attempt,
+    }
+
+
+def is_outcome(obj: Any) -> bool:
+    """True when ``obj`` is a stored outcome envelope."""
+    return isinstance(obj, dict) and obj.get(OUTCOME_MARK) is True
+
+
+def unwrap_outcome(obj: Any) -> Any:
+    """The payload value of an envelope; any other object passes through
+    (the data plane between workflow steps: a child's ``data_ref`` is its
+    parent's ``result_ref``, and the child runtime wants the value)."""
+    return obj["value"] if is_outcome(obj) else obj
 
 
 class ObjectStore:
     def __init__(self, bandwidth_bps: float = 1.25e9, rtt_s: float = 0.002):
         self._blobs: Dict[str, bytes] = {}
+        self._raw: Set[str] = set()      # keys whose payload was put as bytes
         self.bandwidth = bandwidth_bps   # 10 GbE default
         self.rtt = rtt_s
         self.n_puts = 0
@@ -25,20 +64,41 @@ class ObjectStore:
         blob = obj if isinstance(obj, bytes) else pickle.dumps(obj)
         key = key or ("sha256:" + hashlib.sha256(blob).hexdigest()[:24])
         self._blobs[key] = blob
+        # record HOW the payload was stored at put() time — get() must not
+        # guess (raw bytes that happen to be valid pickle must come back
+        # as the bytes the client stored, and corruption of a pickled blob
+        # must surface, not silently degrade to bytes)
+        if isinstance(obj, bytes):
+            self._raw.add(key)
+        else:
+            self._raw.discard(key)
         self.n_puts += 1
         return key
 
     def get(self, key: str) -> Any:
         self.n_gets += 1
         blob = self._blobs[key]
-        try:
-            return pickle.loads(blob)
-        except Exception:
+        if key in self._raw:
             return blob
+        return pickle.loads(blob)    # corruption raises; never masked
 
     def get_raw(self, key: str) -> bytes:
         self.n_gets += 1
         return self._blobs[key]
+
+    def alias(self, src_key: str, dst_key: str) -> str:
+        """Expose the blob under ``src_key`` at ``dst_key`` too (no copy).
+
+        The workflow runner's resume index: a finished step's outcome is
+        aliased under a deterministic per-step key, so a re-submitted
+        workflow can skip recomputation.
+        """
+        self._blobs[dst_key] = self._blobs[src_key]
+        if src_key in self._raw:
+            self._raw.add(dst_key)
+        else:
+            self._raw.discard(dst_key)
+        return dst_key
 
     def __contains__(self, key: str) -> bool:
         return key in self._blobs
@@ -50,22 +110,29 @@ class ObjectStore:
         """Fan-in barrier on the data plane: materialize the objects under
         ``refs`` (in order) as ONE stored list and return its ref.
 
-        Used by the workflow runner when a step has several parents — the
-        child runtime fetches a single combined data set instead of the
-        client shuttling intermediate results around.
+        Outcome envelopes are unwrapped to their values — a fan-in step's
+        parents are result refs, and the child runtime wants the results.
         """
-        return self.put([self.get(r) for r in refs], key=key)
+        return self.put([unwrap_outcome(self.get(r)) for r in refs], key=key)
 
     # -- outcome records -------------------------------------------------
     def persist_outcome(self, inv, result: Any,
                         err: Optional[str]) -> str:
-        """Persist an invocation's outcome under the key gateway futures
-        poll (``result:inv<id>``); returns the ref. Shared by the node
-        manager and the engine backend so both write the same record."""
-        record = result if result is not None else \
-            {"inv_id": inv.inv_id, "success": err is None, "error": err}
-        inv.result_ref = self.put(record, key=f"result:inv{inv.inv_id}")
+        """Persist an invocation's outcome envelope under the key gateway
+        futures poll (``result:inv<id>``); returns the ref.  Shared by the
+        node manager and the engine backend so both write the same record.
+        ``result`` is stored even when ``err`` is set (partial results of
+        a failure are preserved, the error is never dropped)."""
+        inv.result_ref = self.put(make_outcome(inv, result, err),
+                                  key=f"result:inv{inv.inv_id}")
         return inv.result_ref
+
+    def get_outcome(self, ref: str) -> Dict[str, Any]:
+        """Fetch an outcome envelope by ref (KeyError when absent)."""
+        rec = self.get(ref)
+        if not is_outcome(rec):
+            raise TypeError(f"{ref!r} does not hold an outcome envelope")
+        return rec
 
     # -- latency model ---------------------------------------------------
     def transfer_time(self, key: str) -> float:

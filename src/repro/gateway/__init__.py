@@ -1,15 +1,18 @@
 """Unified Hardless invocation gateway: one ``invoke()`` path over the
 calibrated cluster simulation and real JAX execution on this host, plus
 the workflow composition layer (chains / fan-out / fan-in as one
-submission)."""
+submission) and at-least-once delivery (lease-based requeue, worker
+supervision, workflow resume)."""
 from repro.gateway.backends import Backend, EngineBackend, SimBackend
 from repro.gateway.future import (InvocationError, InvocationFuture,
-                                  InvocationRejected)
+                                  InvocationRejected,
+                                  InvocationRetriesExhausted)
 from repro.gateway.gateway import Gateway
 from repro.gateway.workflow import (Step, Workflow, WorkflowFuture,
                                     WorkflowRunner, WorkflowStepError)
 
 __all__ = ["Backend", "EngineBackend", "SimBackend", "Gateway",
            "InvocationError", "InvocationFuture", "InvocationRejected",
+           "InvocationRetriesExhausted",
            "Step", "Workflow", "WorkflowFuture", "WorkflowRunner",
            "WorkflowStepError"]

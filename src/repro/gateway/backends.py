@@ -28,7 +28,7 @@ from repro.core.cluster import Cluster
 from repro.core.events import Invocation, runtime_key_for
 from repro.core.metrics import MetricsCollector
 from repro.core.runtime import HOST_ACC, RuntimeDef, RuntimeRegistry, run_batch
-from repro.core.storage import ObjectStore
+from repro.core.storage import ObjectStore, unwrap_outcome
 
 
 class CapacityHooks:
@@ -370,7 +370,8 @@ class EngineBackend(Backend):
 
     def __init__(self, *, max_warm: int = 4, accelerator: str = HOST_ACC,
                  n_workers: Optional[int] = None, max_batch: int = 8,
-                 batch_wait_s: float = 0.002, max_queue: int = 256):
+                 batch_wait_s: float = 0.002, max_queue: int = 256,
+                 monitor_interval_s: float = 0.05):
         self.store = ObjectStore()
         self.registry = RuntimeRegistry()
         self.metrics = MetricsCollector()
@@ -379,10 +380,14 @@ class EngineBackend(Backend):
         self.max_batch = max(int(max_batch), 1)
         self.batch_wait_s = max(float(batch_wait_s), 0.0)
         self.max_queue = max(int(max_queue), 1)
+        self.monitor_interval_s = max(float(monitor_interval_s), 1e-3)
         self.n_cold_starts = 0
         self.n_warm_starts = 0
         self.n_prewarms = 0
         self.n_rejected = 0
+        self.n_worker_crashes = 0    # dead worker threads the monitor reaped
+        self.n_requeued = 0          # stranded events redelivered
+        self.n_retries_exhausted = 0
         self.n_batches = 0
         self.batch_sizes: List[int] = []
         self._handles: "OrderedDict[str, Any]" = OrderedDict()
@@ -406,6 +411,13 @@ class EngineBackend(Backend):
         self._devices: List[Any] = []
         self._shutdown = False
         self._hooks: Optional["EngineCapacityHooks"] = None
+        # worker supervision: widx -> (runtime_key, batch) for every batch
+        # claimed but not yet finished; the monitor thread requeues-or-
+        # fails batches whose worker thread died and respawns to target
+        self._inflight_batches: Dict[int, tuple] = {}
+        self._crash_widx: Set[int] = set()   # fault injection (crash_worker)
+        self._monitor: Optional[threading.Thread] = None
+        self._monitor_stop = threading.Event()
 
     # -- lifecycle -------------------------------------------------------
     def _start_workers_locked(self) -> None:
@@ -424,11 +436,27 @@ class EngineBackend(Backend):
             self._target_workers = max(int(n), 1)
         self.n_workers = self._target_workers
         self._spawn_to_target_locked()
+        if self._monitor is None or not self._monitor.is_alive():
+            self._monitor = threading.Thread(
+                target=self._monitor_loop, name="engine-monitor",
+                daemon=True)
+            self._monitor.start()
 
     def _spawn_to_target_locked(self) -> None:
         for w in range(self._target_workers):
             t = self._threads.get(w)
             if t is None or not t.is_alive():
+                # a dead thread may still own an in-flight batch (it
+                # crashed between two monitor ticks): recover it BEFORE a
+                # new thread takes over the widx, or the batch's entry is
+                # overwritten and its events strand forever
+                if t is not None and w in self._inflight_batches:
+                    key, batch = self._inflight_batches.pop(w)
+                    self._busy_keys.discard(key)
+                    self._n_inflight -= len(batch)
+                    self.n_worker_crashes += 1
+                    self._recover_batch_locked(batch)
+                    self._settled.notify_all()
                 t = threading.Thread(target=self._worker_loop, args=(w,),
                                      name=f"engine-w{w}", daemon=True)
                 self._threads[w] = t
@@ -450,8 +478,21 @@ class EngineBackend(Backend):
         with self._lock:
             self._shutdown = True
             self._work.notify_all()
+        self._monitor_stop.set()
         for t in list(self._threads.values()):
             t.join(timeout=5.0)
+        if self._monitor is not None:
+            self._monitor.join(timeout=5.0)
+
+    # -- fault injection -------------------------------------------------
+    def crash_worker(self, widx: int) -> None:
+        """Fault injection: worker ``widx`` dies abruptly the next time it
+        claims a batch — the thread exits mid-flight without settling or
+        releasing anything, exactly the state the worker monitor must
+        detect and recover (requeue/fail the batch, respawn to target)."""
+        with self._lock:
+            self._crash_widx.add(widx)
+            self._work.notify_all()
 
     def now(self) -> float:
         """Wall seconds since this backend was constructed."""
@@ -613,16 +654,93 @@ class EngineBackend(Backend):
                             max(key_or_wake - time.monotonic(), 0.0)
                         self._work.wait(timeout=timeout)
                 key = key_or_wake
+                self._inflight_batches[widx] = (key, batch)
+                if widx in self._crash_widx:
+                    # injected fault: the thread dies abruptly holding a
+                    # batch — no settle, no bookkeeping release.  The
+                    # monitor must find the dead thread and recover.
+                    self._crash_widx.discard(widx)
+                    return
             try:
                 self._execute_batch(widx, batch)
             except Exception as e:  # noqa: BLE001 — never kill the worker
                 self._settle_failed(batch, f"engine dispatcher error: {e!r}")
             finally:
                 with self._lock:
+                    self._inflight_batches.pop(widx, None)
                     self._busy_keys.discard(key)
                     self._n_inflight -= len(batch)
                     self._work.notify_all()
                     self._settled.notify_all()
+
+    # -- worker supervision (at-least-once past thread death) ------------
+    def _monitor_loop(self) -> None:
+        """Detect dead ``engine-w*`` threads, requeue-or-fail their
+        in-flight batch, and respawn workers to target.  ``_settle_failed``
+        only covers exceptions *inside* a live worker; this covers the
+        worker itself dying (injected crash, or a bug that escapes the
+        loop) so no event is ever stranded."""
+        while True:
+            with self._lock:
+                if self._shutdown:
+                    return
+                self._reap_dead_workers_locked()
+            self._monitor_stop.wait(self.monitor_interval_s)
+
+    def _reap_dead_workers_locked(self) -> None:
+        recovered = False
+        for widx, (key, batch) in list(self._inflight_batches.items()):
+            t = self._threads.get(widx)
+            if t is not None and t.is_alive():
+                continue
+            del self._inflight_batches[widx]
+            self._busy_keys.discard(key)
+            self._n_inflight -= len(batch)
+            self.n_worker_crashes += 1
+            self._recover_batch_locked(batch)
+            recovered = True
+        if self._started:
+            self._spawn_to_target_locked()  # heal crashed-thread deficits
+        if recovered:
+            self._work.notify_all()
+            self._settled.notify_all()
+
+    def _recover_batch_locked(self, batch: List[Invocation]) -> None:
+        """Redeliver a dead worker's batch (``attempt`` bumped, bounded by
+        the runtime's ``max_attempts``); exhausted events settle as
+        permanent error records."""
+        now = self.now()
+        retries: List[Invocation] = []
+        for inv in batch:
+            if inv.r_end is not None:
+                continue
+            rdef = self.registry.get(inv.runtime_id)
+            if inv.attempt + 1 < rdef.max_attempts:
+                inv.reset_for_retry()
+                retries.append(inv)
+                self.n_requeued += 1
+            else:
+                inv.retries_exhausted = True
+                inv.clear_attempt_timestamps()
+                inv.r_end = max(now, inv.r_start or 0.0)
+                inv.success = False
+                inv.error = (f"retries exhausted after {inv.attempt + 1} "
+                             f"attempt(s): worker crashed mid-batch")
+                self.n_retries_exhausted += 1
+                try:
+                    self.store.persist_outcome(inv, None, inv.error)
+                except Exception:   # noqa: BLE001 — store itself broken
+                    pass
+                self.metrics.record(inv)
+        if retries:
+            # one batch is always one runtime_key; redeliver at the head
+            key = retries[0].runtime_key
+            kq = self._queues.get(key)
+            if kq is None:
+                kq = self._queues[key] = _KeyQueue()
+            kq.items.extendleft(reversed(retries))
+            kq.deadline = time.monotonic()      # ready immediately
+            self._n_pending += len(retries)
 
     def _settle_failed(self, batch: List[Invocation], err: str) -> None:
         """Last-resort settlement: a dispatcher bug or unserializable
@@ -703,7 +821,7 @@ class EngineBackend(Backend):
             inv.cold_start = cold
             inv.prewarmed = prewarmed
 
-        datas = [self.store.get(inv.data_ref)
+        datas = [unwrap_outcome(self.store.get(inv.data_ref))
                  if inv.data_ref in self.store else None for inv in batch]
         e_start = max([self.now()] + [inv.n_start for inv in batch])
         t0 = self.now()
@@ -737,6 +855,8 @@ class EngineBackend(Backend):
             if key in self._handles:
                 self._handle_idle_since[key] = self.now()   # keep-alive TTL
             for inv, inv_err in zip(batch, errs):
+                if inv.r_end is not None:
+                    continue        # already settled (duplicate delivery)
                 inv.n_end = inv.e_end
                 inv.r_end = max(self.now(), inv.n_end)
                 inv.success = inv_err is None

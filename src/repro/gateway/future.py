@@ -12,6 +12,7 @@ from __future__ import annotations
 from typing import Any, Optional
 
 from repro.core.events import Invocation
+from repro.core.storage import unwrap_outcome
 
 
 class InvocationError(RuntimeError):
@@ -30,6 +31,14 @@ class InvocationRejected(InvocationError):
     token-bucket quotas and weighted fair-share limits
     (``repro.controlplane.admission``); the reason is in
     ``invocation.error``."""
+
+
+class InvocationRetriesExhausted(InvocationError):
+    """Every delivery attempt was lost (node death, worker crash, lease
+    expiry) up to the runtime's ``max_attempts`` bound: the event settled
+    as a permanent error record.  Distinct from
+    :class:`InvocationRejected` — the platform *tried* (possibly several
+    times); blind resubmission will likely fail the same way."""
 
 
 class InvocationFuture:
@@ -74,8 +83,12 @@ class InvocationFuture:
         """Block until the invocation settles; return the stored result.
 
         Raises :class:`InvocationRejected` if the event was shed by
-        backpressure, :class:`InvocationError` on execution failure,
-        ``TimeoutError`` if the backend drains without the event settling.
+        backpressure, :class:`InvocationRetriesExhausted` when every
+        delivery attempt was lost, :class:`InvocationError` on execution
+        failure, ``TimeoutError`` if the backend drains without the event
+        settling.  The stored outcome envelope is unwrapped to its value
+        — a runtime that returned ``None`` yields ``None``, not
+        bookkeeping.
         """
         if not self.done():
             wait = getattr(self._backend, "wait", None)
@@ -89,8 +102,11 @@ class InvocationFuture:
                 f"window (+{extra_time_s}s)")
         inv = self.invocation
         if not inv.success:
-            raise InvocationRejected(inv) if inv.rejected \
-                else InvocationError(inv)
+            if inv.rejected:
+                raise InvocationRejected(inv)
+            if inv.retries_exhausted:
+                raise InvocationRetriesExhausted(inv)
+            raise InvocationError(inv)
         if inv.result_ref is not None and inv.result_ref in self._backend.store:
-            return self._backend.store.get(inv.result_ref)
+            return unwrap_outcome(self._backend.store.get(inv.result_ref))
         return None

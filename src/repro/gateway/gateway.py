@@ -111,19 +111,24 @@ class Gateway:
         return futs
 
     # -- composition ----------------------------------------------------
-    def submit_workflow(self, wf) -> "WorkflowFuture":  # noqa: F821
+    def submit_workflow(self, wf, *, resume: bool = False
+                        ) -> "WorkflowFuture":  # noqa: F821
         """Submit a :class:`~repro.gateway.workflow.Workflow` DAG as one
         composed application; returns a ``WorkflowFuture``.
 
         Steps are submitted the moment their dependencies resolve, with
         intermediate results flowing node-to-node through the object
         store; ``result()`` raises ``WorkflowStepError`` naming the
-        failing step.  See ``docs/workflows.md``.
+        failing step.  With ``resume=True``, steps whose results a
+        previous submission of this workflow (same name) already
+        persisted are restored without recomputation — crash/retry
+        recovery re-runs only the unfinished suffix.  See
+        ``docs/workflows.md`` and ``docs/reliability.md``.
         """
         from repro.gateway.workflow import WorkflowRunner
         if self._runner is None:
             self._runner = WorkflowRunner(self)
-        return self._runner.submit(wf)
+        return self._runner.submit(wf, resume=resume)
 
     # -- completion -----------------------------------------------------
     def drain(self, extra_time_s: float = 600.0) -> None:

@@ -37,6 +37,11 @@ admission rejections), then propagation — the failing step poisons every
 transitive descendant (status ``cancelled``, never submitted, so the engine
 dispatcher stays drainable) and ``WorkflowFuture.result()`` raises
 :class:`WorkflowStepError` naming the step.  See ``docs/workflows.md``.
+
+Crash recovery: ``submit(wf, resume=True)`` restores steps whose outcome a
+previous submission already persisted (deterministic per-step resume keys
+in the object store) as DONE — only the unfinished suffix of the DAG is
+recomputed.  See ``docs/reliability.md``.
 """
 from __future__ import annotations
 
@@ -44,6 +49,7 @@ import itertools
 import threading
 from typing import Any, Dict, List, Optional, Sequence, Union
 
+from repro.core.storage import is_outcome, unwrap_outcome
 from repro.gateway.future import InvocationFuture
 
 _submission_ids = itertools.count()
@@ -181,7 +187,8 @@ class Workflow:
 class _StepState:
     """Runner-side mutable state for one step."""
 
-    __slots__ = ("step", "status", "attempts", "future", "data_ref", "error")
+    __slots__ = ("step", "status", "attempts", "future", "data_ref",
+                 "result_ref", "error")
 
     def __init__(self, step: Step):
         self.step = step
@@ -189,14 +196,22 @@ class _StepState:
         self.attempts = 0
         self.future: Optional[InvocationFuture] = None   # last attempt
         self.data_ref: Optional[str] = None              # resolved input
+        self.result_ref: Optional[str] = None            # settled output ref
+        #   (from the step's invocation, or the resume index for steps
+        #    restored from a previous submission's persisted outcome)
         self.error: Optional[str] = None
 
 
 class _WorkflowState:
     """Runner-side state for one submitted workflow."""
 
-    def __init__(self, wf: Workflow):
+    def __init__(self, wf: Workflow, resume_key: Optional[str] = None):
         self.wf = wf
+        # crash recovery: when set, each finished step's outcome is
+        # aliased under the deterministic key ``wfres:<resume_key>:<step>``
+        # and a re-submission restores those steps as DONE instead of
+        # recomputing them
+        self.resume_key = resume_key
         # unique per submission: two workflows may share a name, but their
         # staged fan-in objects must not collide in the store
         self.uid = next(_submission_ids)
@@ -257,7 +272,7 @@ class WorkflowFuture:
         self._runner.wait(self._state, extra_time_s=extra_time_s)
         if self._state.error is not None:
             raise self._state.error
-        outs = {s.name: self._state.steps[s.name].future.result()
+        outs = {s.name: self._runner.step_output(self._state, s.name)
                 for s in self._state.wf.sinks()}
         return next(iter(outs.values())) if len(outs) == 1 else outs
 
@@ -279,18 +294,53 @@ class WorkflowRunner:
         self._live: List[_WorkflowState] = []
 
     # -- submission ------------------------------------------------------
-    def submit(self, wf: Workflow) -> WorkflowFuture:
-        """Validate ``wf``, launch its source steps, return its future."""
+    def submit(self, wf: Workflow, *, resume: bool = False
+               ) -> WorkflowFuture:
+        """Validate ``wf``, launch its source steps, return its future.
+
+        With ``resume=True``, steps whose results a previous submission
+        of this workflow (same name) already persisted in the object
+        store are restored as DONE without resubmission — a crashed
+        driver or a failed-and-fixed step re-runs only the unfinished
+        suffix of the DAG, never its finished parents.
+        """
         wf.validate()
-        state = _WorkflowState(wf)
+        state = _WorkflowState(wf, resume_key=wf.name if resume else None)
         with self._lock:
             self._live.append(state)
+            if state.resume_key is not None:
+                self._restore_resumed(state)
             self._advance(state)    # launch sources (and finalize if they
             #                         all failed to even submit)
-        if self.gateway.backend.autonomous:
+        if self.gateway.backend.autonomous and not state.finished.is_set():
             threading.Thread(target=self._drive, args=(state,),
                              name=f"wf-{wf.name}", daemon=True).start()
         return WorkflowFuture(state, self)
+
+    def _resume_ref(self, state: _WorkflowState, step_name: str) -> str:
+        return f"wfres:{state.resume_key}:{step_name}"
+
+    def _restore_resumed(self, state: _WorkflowState) -> None:
+        """Mark steps DONE whose successful outcome is already persisted
+        under this workflow's deterministic resume keys."""
+        store = self.gateway.backend.store
+        for name, ss in state.steps.items():
+            ref = self._resume_ref(state, name)
+            if ref not in store:
+                continue
+            rec = store.get(ref)
+            if is_outcome(rec) and rec["ok"]:
+                ss.status = DONE
+                ss.result_ref = ref
+
+    def step_output(self, state: _WorkflowState, name: str) -> Any:
+        """A DONE step's output value (via its future, or straight from
+        the store for steps restored by resume)."""
+        ss = state.steps[name]
+        if ss.future is not None:
+            return ss.future.result()
+        return unwrap_outcome(
+            self.gateway.backend.store.get(ss.result_ref))
 
     # -- waiting ---------------------------------------------------------
     def wait(self, state: _WorkflowState, *,
@@ -375,6 +425,14 @@ class WorkflowRunner:
             inv = ss.future.invocation
             if inv.success:
                 ss.status = DONE
+                ss.result_ref = inv.result_ref
+                if state.resume_key is not None and \
+                        inv.result_ref is not None:
+                    # index the outcome under the deterministic resume key
+                    # so a re-submission can skip this step (no copy)
+                    self.gateway.backend.store.alias(
+                        inv.result_ref,
+                        self._resume_ref(state, ss.step.name))
             elif ss.attempts <= ss.step.retries:
                 self._launch(state, ss)          # retry: resubmit as-is
             else:
@@ -411,10 +469,13 @@ class WorkflowRunner:
             # landed in the object store (the parent's NEnd) — on the sim
             # those timestamps sit slightly ahead of the completion
             # callback (modeled upload latency), so pin the event there to
-            # keep the virtual-time dependency chain exact
+            # keep the virtual-time dependency chain exact.  Parents
+            # restored by resume have no invocation this submission;
+            # their output already exists, so they do not pin time.
             at = None
             if step.deps:
                 ends = [state.steps[d.name].future.invocation.n_end
+                        if state.steps[d.name].future is not None else None
                         for d in step.deps]
                 if all(e is not None for e in ends):
                     at = max(max(ends), self.gateway.backend.now())
@@ -438,8 +499,7 @@ class WorkflowRunner:
         """
         store = self.gateway.backend.store
         if step.deps:
-            refs = [state.steps[d.name].future.invocation.result_ref
-                    for d in step.deps]
+            refs = [state.steps[d.name].result_ref for d in step.deps]
             if any(r is None for r in refs):
                 raise RuntimeError(f"step {step.name!r}: a dependency "
                                    f"settled without a result ref")

@@ -14,7 +14,11 @@ Control-plane flags (``docs/controlplane.md``) attach an SLO scaler
 (``--slo-ms``), warm-pool floors (``--min-warm``) and per-tenant quotas
 (``--tenant-quota NAME=RATE[:BURST]``) over either backend;
 ``--metrics-out PATH`` dumps the collector (Prometheus text, or JSON for
-``.json`` paths) after the run.
+``.json`` paths) after the run.  ``--fault-spec`` (``docs/reliability.md``)
+arms a fault-injection schedule — kill/stall sim nodes, crash engine
+workers — and the run demonstrates at-least-once delivery: every event
+still settles (redelivered within the retry bound or a permanent error
+record).
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
         --pods 2 --events 6
@@ -34,6 +38,7 @@ from repro.controlplane import (AdmissionPolicy, ControlPlane,
                                 ControlPlaneConfig, SLOPolicy, WarmPolicy)
 from repro.core.accelerator import AcceleratorSpec
 from repro.core.cluster import Cluster
+from repro.faults import inject, parse_fault_spec
 from repro.core.runtime import RuntimeDef, SimProfile
 from repro.data.tokenizer import ByteTokenizer
 from repro.gateway import (EngineBackend, Gateway, SimBackend, Workflow,
@@ -88,6 +93,12 @@ def main(argv=None):
                     help="after the run, dump the metrics collector to "
                          "PATH — JSON for .json paths, Prometheus text "
                          "otherwise")
+    ap.add_argument("--fault-spec", default=None, metavar="JSON|@FILE",
+                    help="arm a fault-injection schedule: a JSON list of "
+                         "actions (or @path to a file holding one), e.g. "
+                         '\'[{"at": 2.0, "op": "kill-node", "node": '
+                         '"pod0"}]\'; sim ops: kill-node/stall-node, '
+                         "engine ops: crash-worker (docs/reliability.md)")
     args = ap.parse_args(argv)
     if args.backend == "engine":
         if args.sim:
@@ -173,6 +184,14 @@ def main(argv=None):
         )).attach(gw.backend)
         plane.start()
 
+    injector = None
+    if args.fault_spec:
+        spec_text = args.fault_spec
+        if spec_text.startswith("@"):
+            with open(spec_text[1:]) as f:
+                spec_text = f.read()
+        injector = inject(gw.backend, parse_fault_spec(spec_text))
+
     cfg_run = {"max_new_tokens": args.max_new_tokens}
     if args.workflow:
         # composition demo: each workflow is a 3-step chain whose steps
@@ -222,6 +241,12 @@ def main(argv=None):
     if plane is not None:
         plane.stop()
         print(f"controlplane: {plane.summary()}")
+    if injector is not None:
+        injector.disarm()
+        s = m.summary()
+        print(f"faults: {injector.summary()} retried={s['retried']:.0f} "
+              f"failed={s['failed']:.0f} "
+              f"exhausted={s['retries_exhausted']:.0f}")
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             if args.metrics_out.endswith(".json"):
@@ -233,9 +258,13 @@ def main(argv=None):
         # a retried-then-recovered step leaves its failed attempt in the
         # metrics; the demo's verdict is whether the workflows completed
         return 0 if wf_ok else 1
-    # admission sheds are deliberate policy outcomes, not failures
+    # admission sheds are deliberate policy outcomes, not failures; with
+    # faults armed, a retry-exhausted error record is the at-least-once
+    # contract working as designed (settled, not stranded)
     n_shed = sum(1 for i in m.completed if i.rejected)
-    return 0 if ok + n_shed == len(m.completed) else 1
+    n_exhausted = (sum(1 for i in m.completed if i.retries_exhausted)
+                   if injector is not None else 0)
+    return 0 if ok + n_shed + n_exhausted == len(m.completed) else 1
 
 
 if __name__ == "__main__":

@@ -193,8 +193,8 @@ def test_bounded_queue_sheds_and_surfaces_through_future():
     gw.drain()
     assert f1.invocation.success and f2.invocation.success
     assert eb.n_rejected == 1
-    rec = gw.backend.store.get(f3.invocation.result_ref)
-    assert rec["success"] is False
+    rec = gw.backend.store.get_outcome(f3.invocation.result_ref)
+    assert rec["ok"] is False and rec["error"]
 
 
 def test_batch_fn_failure_fails_every_event_in_the_batch():

@@ -1,0 +1,361 @@
+"""At-least-once delivery: visibility leases, fault injection, worker
+supervision, and sim/engine failure-path parity.
+
+The reliability contract under test (docs/reliability.md):
+
+* taking an event grants a lease; an expired or released lease requeues
+  the event with ``attempt`` bumped, head-of-queue;
+* redelivery is bounded by ``RuntimeDef.max_attempts``; past it the event
+  settles as a permanent ``retries exhausted`` error record — every
+  submitted invocation settles, none stranded;
+* the same fault class yields equivalent outcome records on both
+  backends (attempt counts, error shape, summary failure counters);
+* ``InvocationRejected`` (shed, never tried) and
+  ``InvocationRetriesExhausted`` (tried and lost) are distinguishable.
+"""
+import re
+import time
+
+import pytest
+
+from repro.core.cluster import GPU_K600, Cluster, tinyyolo_runtime
+from repro.core.events import Invocation
+from repro.faults import FaultAction, inject, parse_fault_spec
+from repro.core.queue import ScannableQueue
+from repro.core.runtime import RuntimeDef, SimProfile
+from repro.gateway import (EngineBackend, Gateway, InvocationRejected,
+                           InvocationRetriesExhausted)
+
+EXHAUSTED_RE = re.compile(r"^retries exhausted after \d+ attempt\(s\): ")
+
+
+def mk_inv(rt="rt-a", t=0.0):
+    return Invocation(runtime_id=rt, data_ref="d", r_start=t)
+
+
+# ---------------------------------------------------------------- leases
+def test_take_grants_lease_and_ack_releases_it():
+    q = ScannableQueue(lease_s=10.0)
+    inv = mk_inv()
+    q.publish(inv, 0.0)
+    got = q.take_any({"rt-a"}, 0.0, holder="n0")
+    assert got is inv and q.n_leased == 1
+    assert q.holder_of(inv.inv_id) == "n0"
+    assert q.ack(inv.inv_id) and q.n_leased == 0
+    assert q.reap(1e9) == []        # nothing left to reap
+
+
+def test_expired_lease_requeues_head_of_queue_with_attempt_bump():
+    q = ScannableQueue(lease_s=10.0)
+    q.configure_retries(lambda inv: 3, lambda inv, msg: None)
+    first, second = mk_inv(t=0.0), mk_inv(t=1.0)
+    q.publish(first, 0.0)
+    q.publish(second, 1.0)
+    taken = q.take_any({"rt-a"}, 1.0, holder="n0")
+    assert taken is first
+    assert q.reap(5.0) == []                 # lease still live
+    requeued = q.reap(11.0)                  # 1.0 + 10.0 lease expired
+    assert requeued == [first] and first.attempt == 1
+    assert first.n_start is None and first.r_end is None
+    # redelivered ahead of younger work
+    assert [i.inv_id for i in q.scan()] == [first.inv_id, second.inv_id]
+
+
+def test_exhausted_event_settles_through_fail_fn_not_redelivery():
+    q = ScannableQueue(lease_s=1.0)
+    failed = []
+    q.configure_retries(lambda inv: 1,
+                        lambda inv, msg: failed.append((inv, msg)))
+    inv = mk_inv()
+    q.publish(inv, 0.0)
+    q.take_any({"rt-a"}, 0.0, holder="n0")
+    assert q.reap(2.0) == [] and len(q) == 0
+    assert q.n_exhausted == 1
+    (lost, msg), = failed
+    assert lost is inv and EXHAUSTED_RE.match(msg)
+
+
+def test_release_holder_redelivers_only_that_nodes_leases():
+    q = ScannableQueue(lease_s=100.0)
+    q.configure_retries(lambda inv: 3, lambda inv, msg: None)
+    a, b = mk_inv(t=0.0), mk_inv(t=0.0)
+    q.publish(a, 0.0)
+    q.publish(b, 0.0)
+    q.take_any({"rt-a"}, 0.0, holder="n0")
+    q.take_any({"rt-a"}, 0.0, holder="n1")
+    requeued = q.release_holder("n0", 1.0)
+    assert requeued == [a] and a.attempt == 1
+    assert q.holder_of(b.inv_id) == "n1"    # untouched
+
+
+def test_late_settled_event_is_dropped_not_redelivered():
+    q = ScannableQueue(lease_s=1.0)
+    q.configure_retries(lambda inv: 3, lambda inv, msg: None)
+    inv = mk_inv()
+    q.publish(inv, 0.0)
+    q.take_any({"rt-a"}, 0.0, holder="n0")
+    inv.r_end = 0.5                         # settled without ack
+    assert q.reap(10.0) == [] and q.n_leased == 0 and len(q) == 0
+
+
+# ------------------------------------------------------- fault spec
+def test_fault_spec_parses_and_validates():
+    actions = parse_fault_spec(
+        '[{"at": 1.0, "op": "kill-node", "node": "n0"},'
+        ' {"at": 2.0, "op": "crash-worker", "worker": 1}]')
+    assert actions[0] == FaultAction(at=1.0, op="kill-node", node="n0")
+    with pytest.raises(ValueError):
+        parse_fault_spec('[{"at": 1.0, "op": "meteor-strike"}]')
+    with pytest.raises(ValueError):
+        parse_fault_spec('[{"at": 1.0, "op": "kill-node"}]')  # no node
+
+
+def test_disarmed_injector_does_not_fire_scheduled_sim_actions():
+    """Sim clock callbacks cannot be cancelled — disarm must neuter a
+    scheduled action that fires later."""
+    cl = Cluster(seed=0)
+    cl.add_node("n0", [GPU_K600])
+    cl.register_runtime(tinyyolo_runtime())
+    cl.store.put(b"\0" * 64, key="d")
+    inj = inject(cl, [{"at": 50.0, "op": "kill-node", "node": "n0"}])
+    inj.disarm()
+    cl.submit(mk_inv("onnx-tinyyolov2", t=60.0))    # after the kill time
+    cl.drain()
+    assert not cl.nodes[0].dead and inj.injected == []
+    assert cl.metrics.r_success() == 1
+
+
+def test_sim_ops_rejected_on_engine_and_vice_versa():
+    eb = EngineBackend()
+    with pytest.raises(ValueError):
+        inject(eb, [{"at": 0.0, "op": "kill-node", "node": "x"}])
+    cl = Cluster(seed=0)
+    with pytest.raises(ValueError):
+        inject(cl, [{"at": 0.0, "op": "crash-worker", "worker": 0}])
+
+
+# ------------------------------------------------------- sim node faults
+def _kill_cluster(max_attempts, n_nodes=2, n_events=8, kill_at=4.0):
+    import dataclasses
+    cl = Cluster(seed=0, lease_s=30.0)
+    for i in range(n_nodes):
+        cl.add_node(f"n{i}", [GPU_K600])
+    cl.register_runtime(dataclasses.replace(tinyyolo_runtime(),
+                                            max_attempts=max_attempts))
+    cl.store.put(b"\0" * 1024, key="d")
+    for i in range(n_events):
+        cl.submit(mk_inv("onnx-tinyyolov2", t=float(i)))
+    inj = inject(cl, [{"at": kill_at, "op": "kill-node", "node": "n0"}])
+    cl.drain()
+    inj.disarm()
+    return cl
+
+
+def test_node_kill_redelivers_inflight_and_all_events_settle():
+    cl = _kill_cluster(max_attempts=3)
+    m = cl.metrics
+    assert len(m.completed) == 8            # none stranded
+    assert all(i.r_end is not None for i in m.completed)
+    assert m.r_success() == 8               # survivor absorbed the retries
+    assert m.summary()["retried"] >= 1      # the kill actually lost work
+    assert all(i.check_monotone() for i in m.completed)
+    # retried events record fresh placement on the survivor
+    retried = [i for i in m.completed if i.attempt > 0]
+    assert retried and all(i.node == "n1" for i in retried)
+
+
+def test_node_kill_without_retries_settles_exhausted_error_records():
+    cl = _kill_cluster(max_attempts=1)
+    m = cl.metrics
+    assert len(m.completed) == 8            # still none stranded
+    s = m.summary()
+    assert s["retries_exhausted"] >= 1 and s["failed"] == s["retries_exhausted"]
+    for i in m.completed:
+        if not i.success:
+            assert i.retries_exhausted and EXHAUSTED_RE.match(i.error)
+            assert f"result:inv{i.inv_id}" in cl.store  # pollers see it
+
+
+def test_stalled_node_loses_lease_and_survivor_completes():
+    """A stall past the lease redelivers elsewhere; the stalled node's
+    late completion is dropped — each event settles exactly once."""
+    import dataclasses
+    cl = Cluster(seed=0, lease_s=5.0)
+    cl.add_node("n0", [GPU_K600])
+    cl.add_node("n1", [GPU_K600])
+    cl.register_runtime(dataclasses.replace(tinyyolo_runtime(),
+                                            max_attempts=3))
+    cl.store.put(b"\0" * 1024, key="d")
+    # 5 events at t=0: n0 (2 slots) and n1 (2 slots) grab 4, one queues
+    for _ in range(5):
+        cl.submit(mk_inv("onnx-tinyyolov2", t=0.0))
+    inj = inject(cl, [{"at": 0.1, "op": "stall-node", "node": "n0",
+                       "duration_s": 60.0}], reap_interval_s=1.0)
+    cl.drain()
+    inj.disarm()
+    m = cl.metrics
+    assert len(m.completed) == 5
+    assert m.r_success() == 5
+    # settled exactly once each (no duplicate records from the stalled
+    # node's deferred completions)
+    ids = [i.inv_id for i in m.completed]
+    assert len(ids) == len(set(ids))
+    assert m.summary()["retried"] >= 1      # the stall lost at least one
+    assert all(i.node == "n1" for i in m.completed if i.attempt > 0)
+
+
+# ---------------------------------------------------- engine worker crash
+def _slow_runtime(max_attempts=3, elat=0.03):
+    def fn(data, cfg):
+        time.sleep(elat)
+        return {"ok": True, "i": (data or {}).get("i")}
+    return RuntimeDef(runtime_id="slow",
+                      profiles={"host-jax": SimProfile(elat_median_s=elat)},
+                      fn=fn, max_attempts=max_attempts)
+
+
+def _crash_busy_worker(eb, timeout_s=10.0):
+    t0 = time.monotonic()
+    while not eb._inflight_batches and time.monotonic() - t0 < timeout_s:
+        time.sleep(0.002)
+    assert eb._inflight_batches, "no batch ever went in flight"
+    eb.crash_worker(next(iter(eb._inflight_batches)))
+
+
+def test_engine_monitor_recovers_crashed_worker_batch():
+    eb = EngineBackend(n_workers=2, max_batch=2, batch_wait_s=0.005)
+    gw = Gateway(eb)
+    gw.register(_slow_runtime(max_attempts=3))
+    gw.map("slow", [{"i": i} for i in range(10)])
+    _crash_busy_worker(eb)
+    gw.drain(extra_time_s=60.0)
+    m = eb.metrics
+    assert len(m.completed) == 10           # none stranded
+    assert m.r_success() == 10              # redelivery completed the work
+    assert eb.n_worker_crashes >= 1 and eb.n_requeued >= 1
+    # the monitor respawned to target: the dispatcher still serves
+    f = gw.invoke("slow", {"i": 99})
+    assert f.result()["i"] == 99
+    eb.shutdown()
+
+
+def test_engine_crash_without_retries_settles_exhausted():
+    eb = EngineBackend(n_workers=1, max_batch=2, batch_wait_s=0.005)
+    gw = Gateway(eb)
+    gw.register(_slow_runtime(max_attempts=1))
+    futs = gw.map("slow", [{"i": i} for i in range(4)])
+    _crash_busy_worker(eb)
+    gw.drain(extra_time_s=60.0)
+    m = eb.metrics
+    assert len(m.completed) == 4            # none stranded
+    s = m.summary()
+    assert s["retries_exhausted"] >= 1
+    n_raised = 0
+    for f in futs:
+        try:
+            f.result()
+        except InvocationRetriesExhausted as e:
+            assert EXHAUSTED_RE.match(e.invocation.error)
+            n_raised += 1
+    assert n_raised == s["retries_exhausted"]
+    eb.shutdown()
+
+
+def test_respawn_before_monitor_tick_recovers_stranded_batch():
+    """set_n_workers may respawn a crashed worker's widx before the
+    monitor's next tick; the spawn path itself must recover the dead
+    thread's in-flight batch, or it strands forever."""
+    eb = EngineBackend(n_workers=1, max_batch=2, batch_wait_s=0.005,
+                       monitor_interval_s=60.0)  # monitor effectively idle
+    gw = Gateway(eb)
+    gw.register(_slow_runtime(max_attempts=3))
+    gw.map("slow", [{"i": i} for i in range(4)])
+    _crash_busy_worker(eb)
+    t0 = time.monotonic()
+    while any(t.is_alive() for t in eb._threads.values()) and \
+            time.monotonic() - t0 < 10.0:
+        time.sleep(0.002)
+    eb.set_n_workers(1)     # the respawn path, racing ahead of the monitor
+    gw.drain(extra_time_s=30.0)
+    m = eb.metrics
+    assert len(m.completed) == 4 and m.r_success() == 4
+    eb.shutdown()
+
+
+# --------------------------------------------------- failure-path parity
+def test_failure_parity_exhausted_records_match_across_backends():
+    """The same fault class — a lost delivery past its retry bound —
+    yields equivalent outcome records on sim and engine: same error
+    shape, same attempt count, same summary failure counters."""
+    # sim: single node killed while running the only event, no retries
+    import dataclasses
+    cl = Cluster(seed=0, lease_s=30.0)
+    cl.add_node("n0", [GPU_K600])
+    cl.register_runtime(dataclasses.replace(tinyyolo_runtime(),
+                                            max_attempts=1))
+    cl.store.put(b"\0" * 1024, key="d")
+    cl.submit(mk_inv("onnx-tinyyolov2", t=0.0))
+    inj = inject(cl, [{"at": 0.5, "op": "kill-node", "node": "n0"}])
+    cl.drain()
+    inj.disarm()
+    sim_inv, = cl.metrics.completed
+
+    # engine: single worker crashes the moment it claims the only event
+    eb = EngineBackend(n_workers=1, max_batch=1, batch_wait_s=0.0)
+    gw = Gateway(eb)
+    gw.register(_slow_runtime(max_attempts=1, elat=0.2))
+    eb.crash_worker(0)                      # armed before first pick
+    gw.invoke("slow", {"i": 0})
+    gw.drain(extra_time_s=60.0)
+    eng_inv, = eb.metrics.completed
+    eb.shutdown()
+
+    for inv in (sim_inv, eng_inv):
+        assert inv.r_end is not None and not inv.success
+        assert inv.retries_exhausted and not inv.rejected
+        assert EXHAUSTED_RE.match(inv.error)
+        assert inv.attempt == 0             # never redelivered (bound 1)
+    sim_sum = cl.metrics.summary()
+    eng_sum = eb.metrics.summary()
+    for k in ("n_completed", "r_success", "failed", "retried",
+              "retries_exhausted", "rejected"):
+        assert sim_sum[k] == eng_sum[k], k
+    # and the persisted envelopes agree on shape
+    sim_rec = cl.store.get_outcome(sim_inv.result_ref)
+    eng_rec = eb.store.get_outcome(eng_inv.result_ref)
+    for rec in (sim_rec, eng_rec):
+        assert rec["ok"] is False and rec["value"] is None
+        assert EXHAUSTED_RE.match(rec["error"])
+
+
+def test_rejected_and_exhausted_are_distinguishable():
+    """Backpressure sheds (never tried, safe to resubmit) and retry
+    exhaustion (tried and lost) must not be conflated."""
+    # shed: overflow a 1-deep admission budget while a slow event runs
+    eb1 = EngineBackend(n_workers=1, max_queue=1, batch_wait_s=0.0)
+    gw1 = Gateway(eb1)
+    gw1.register(_slow_runtime(max_attempts=1, elat=0.3))
+    gw1.invoke("slow", {"i": 0})            # fills the budget
+    shed = gw1.invoke("slow", {"i": 1})     # over budget -> shed
+    assert shed.rejected()
+    gw1.drain(extra_time_s=60.0)
+    with pytest.raises(InvocationRejected):
+        shed.result()
+    assert shed.invocation.rejected
+    assert not shed.invocation.retries_exhausted
+    eb1.shutdown()
+
+    # exhausted: the one delivery attempt is lost to a worker crash
+    eb2 = EngineBackend(n_workers=1, max_batch=1, batch_wait_s=0.0)
+    gw2 = Gateway(eb2)
+    gw2.register(_slow_runtime(max_attempts=1, elat=0.05))
+    eb2.crash_worker(0)
+    lost = gw2.invoke("slow", {"i": 0})
+    gw2.drain(extra_time_s=60.0)
+    with pytest.raises(InvocationRetriesExhausted) as ei:
+        lost.result()
+    assert ei.value.invocation.retries_exhausted
+    assert not ei.value.invocation.rejected
+    # InvocationRetriesExhausted is an InvocationError but NOT a shed
+    assert not isinstance(ei.value, InvocationRejected)
+    eb2.shutdown()

@@ -59,9 +59,13 @@ def test_sim_future_roundtrip_and_store_polling():
     assert not fut.done() and not fut.poll()
     out = fut.result()
     assert fut.done() and fut.poll()
-    # sim completion record lands in the object store under the result ref
-    assert out["success"] is True
+    # a profile-only sim runtime has no real payload: result() is the
+    # value (None), never bookkeeping; the outcome envelope lands in the
+    # object store under the result ref
+    assert out is None
     assert fut.invocation.result_ref in gw.backend.store
+    rec = gw.backend.store.get_outcome(fut.invocation.result_ref)
+    assert rec["ok"] is True and rec["error"] is None
     assert fut.elat is not None and fut.rlat >= fut.elat
 
 
@@ -165,7 +169,8 @@ def test_engine_failure_is_unsuccessful_event_not_crash():
         fut.result()
     # the failure record is still persisted for pollers
     assert fut.poll()
-    assert gw.backend.store.get(inv.result_ref)["success"] is False
+    rec = gw.backend.store.get_outcome(inv.result_ref)
+    assert rec["ok"] is False and "boom" in rec["error"]
 
 
 def test_engine_cold_start_failure_is_unsuccessful_event():

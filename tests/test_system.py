@@ -39,7 +39,7 @@ def test_serverless_serving_end_to_end():
     assert all(i.check_monotone() for i in m.completed)
     # results are persisted in object storage
     for inv in m.completed:
-        res = cl.store.get(inv.result_ref)
+        res = cl.store.get_outcome(inv.result_ref)["value"]
         assert len(res["outputs"]) == 2
         assert all(len(o) <= 4 for o in res["outputs"])
     # warm reuse: only the first event cold-starts

@@ -93,7 +93,11 @@ def test_heterogeneous_chain_completes_on_both_backends(make_backend):
     assert enc.data_ref == det.result_ref
     assert cap.data_ref == enc.result_ref
     assert enc.data_ref in gw.backend.store
-    assert gw.backend.store.get(enc.data_ref)["stages"] == ["detect"]
+    # the chained ref holds the parent's outcome envelope; the runtime's
+    # data fetch unwraps it to the value
+    from repro.core.storage import unwrap_outcome
+    assert unwrap_outcome(
+        gw.backend.store.get(enc.data_ref))["stages"] == ["detect"]
     # provenance tagged for metrics/tracing
     assert det.workflow == "pipeline" and det.step == "detect"
     # dependency ordering is real, not coincidental: a child's RStart is
