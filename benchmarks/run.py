@@ -222,6 +222,24 @@ def _sec_roofline() -> Dict[str, Any]:
     return r
 
 
+def _sec_scale() -> Dict[str, Any]:
+    # --- indexed core at scale: 1M events (BENCH_SCALE_N to reduce) -----
+    from benchmarks.bench_scale import bench as scale_bench
+    t0 = time.perf_counter()
+    s = scale_bench()
+    us = (time.perf_counter() - t0) * 1e6 / max(s["n"], 1)
+    _row("scale_events", us,
+         f"n={s['n']} settled={s['settled']} wall={s['wall_s']:.1f}s "
+         f"rate={s['events_per_s']:.0f}/s rss={s['peak_rss_mb']:.0f}MB")
+    _row("scale_verdicts", us,
+         f"all_settled={int(s['all_settled'])} "
+         f"wall_ok={int(s['within_wall_ceiling'])} "
+         f"rss_ok={int(s['within_rss_ceiling'])} "
+         f"quantile_ok={int(s['quantile_bound_ok'])} "
+         f"(rank_err={s['quantile_rank_err_max']:.4f})")
+    return s
+
+
 SECTIONS: List[Tuple[str, Callable[[], Dict[str, Any]]]] = [
     ("scaling", _sec_scaling),
     ("elat", _sec_elat),
@@ -234,6 +252,7 @@ SECTIONS: List[Tuple[str, Callable[[], Dict[str, Any]]]] = [
     ("faults", _sec_faults),
     ("serving", _sec_serving),
     ("roofline", _sec_roofline),
+    ("scale", _sec_scale),
 ]
 
 

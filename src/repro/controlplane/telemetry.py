@@ -93,7 +93,7 @@ class TelemetryBus:
         self._arrivals: Dict[str, Deque[float]] = {}
         self._ewma: Dict[str, float] = {}
         self._completed: Dict[str, Deque[Invocation]] = {}
-        self._cursor = 0            # index into metrics.completed
+        self._cursor = 0            # monotone metrics.n_recorded watermark
         self.history: Deque[TelemetrySnapshot] = deque(
             maxlen=self.cfg.history_max)
 
@@ -108,7 +108,7 @@ class TelemetryBus:
         per-runtime windows (append-only cursor; shed events included —
         their latency fields are degenerate but their counts matter)."""
         fresh = self.metrics.since(self._cursor)
-        self._cursor += len(fresh)
+        self._cursor = self.metrics.n_recorded
         for inv in fresh:
             self._completed.setdefault(inv.runtime_id, deque()).append(inv)
 

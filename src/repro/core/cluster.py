@@ -36,12 +36,20 @@ class Cluster:
     def __init__(self, *, scheduler: str = "warm", clock=None,
                  invocation_timeout_s: Optional[float] = None,
                  idle_timeout_s: float = 60.0, max_warm: int = 4,
-                 lease_s: float = 60.0, seed: int = 0):
+                 lease_s: float = 60.0, seed: int = 0,
+                 metrics_history_max: Optional[int] = None,
+                 store_outcome_max: Optional[int] = None,
+                 reference_scan_scheduler: bool = False):
+        # metrics_history_max / store_outcome_max bound the raw completion
+        # list and the retained outcome records for huge runs (summaries
+        # stay exact — they are streamed); reference_scan_scheduler swaps
+        # in the O(n)-scan policy implementation (differential testing)
         self.clock = clock or SimClock()
         self.queue = ScannableQueue(lease_s=lease_s)
-        self.store = ObjectStore()
+        self.store = ObjectStore(outcome_max=store_outcome_max)
         self.registry = RuntimeRegistry()
-        self.metrics = MetricsCollector()
+        self.metrics = MetricsCollector(history_max=metrics_history_max)
+        self._reference_scan = reference_scan_scheduler
         self.nodes: List[NodeManager] = []
         self._scheduler_name = scheduler
         self._invocation_timeout = invocation_timeout_s
@@ -64,7 +72,8 @@ class Cluster:
         node = NodeManager(
             name, accs, clock=self.clock, queue=self.queue, store=self.store,
             registry=self.registry, metrics=self.metrics,
-            scheduler=make_scheduler(self._scheduler_name),
+            scheduler=make_scheduler(self._scheduler_name,
+                                     reference_scan=self._reference_scan),
             idle_timeout_s=self._idle_timeout,
             max_warm=self._max_warm,
             invocation_timeout_s=self._invocation_timeout,

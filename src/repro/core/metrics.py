@@ -3,6 +3,20 @@
 Per-invocation timestamps RStart/NStart/EStart/EEnd/NEnd/REnd plus derived
 RLat / ELat / DLat / RSuccess and RFast (moving average of successful
 completions over the trailing 10 s window), and #queued timelines.
+
+**Streaming aggregation.**  Summaries no longer walk the full completion
+history: counters and latency sketches (:class:`~repro.core.quantiles.
+QuantileSketch`) are folded in at ``record()`` time — overall, per
+runtime, and per tenant — so ``summary()`` / ``per_runtime()`` /
+``per_tenant()`` are O(distinct keys) at any event count.  Percentiles
+are **exact** (nearest-rank, unchanged values) below the sketch
+threshold and bounded-memory approximate above it; ``n_recorded`` is the
+monotone completion counter incremental consumers (telemetry cursors,
+backlog accounting) should use instead of ``len(completed)``.
+
+The raw record list ``completed`` is still kept for window queries and
+analysis; pass ``history_max`` to bound it (oldest records are dropped,
+``since()`` index math stays correct via an internal offset).
 """
 from __future__ import annotations
 
@@ -12,17 +26,116 @@ import statistics
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.events import Invocation
+from repro.core.quantiles import QuantileSketch
 
 RFAST_WINDOW_S = 10.0
 
 
+class _StatBucket:
+    """Incrementally-maintained counters + latency sketches for one
+    aggregation key (overall / one runtime / one tenant)."""
+
+    __slots__ = ("n_completed", "r_success", "cold_starts", "prewarmed",
+                 "rejected", "failed", "retried", "retries_exhausted",
+                 "rlat", "elat", "rlat_max")
+
+    def __init__(self, sketch_threshold: int):
+        self.n_completed = 0
+        self.r_success = 0
+        self.cold_starts = 0
+        self.prewarmed = 0
+        self.rejected = 0
+        self.failed = 0
+        self.retried = 0
+        self.retries_exhausted = 0
+        self.rlat = QuantileSketch(threshold=sketch_threshold)
+        self.elat = QuantileSketch(threshold=sketch_threshold)
+        self.rlat_max = 0.0
+
+    def fold(self, inv: Invocation) -> None:
+        self.n_completed += 1
+        self.retried += inv.attempt
+        if inv.cold_start:
+            self.cold_starts += 1
+        if inv.prewarmed:
+            self.prewarmed += 1
+        if inv.rejected:
+            self.rejected += 1
+        if inv.retries_exhausted:
+            self.retries_exhausted += 1
+        if inv.success:
+            self.r_success += 1
+            if inv.rlat is not None:
+                self.rlat.add(inv.rlat)
+                if inv.rlat > self.rlat_max:
+                    self.rlat_max = inv.rlat
+            if inv.elat is not None:
+                self.elat.add(inv.elat)
+        elif not inv.rejected:
+            self.failed += 1
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "n_completed": self.n_completed,
+            "r_success": self.r_success,
+            "rlat_p50": self.rlat.quantile(50) or 0.0,
+            "rlat_p99": self.rlat.quantile(99) or 0.0,
+            "elat_p50": self.elat.quantile(50) or 0.0,
+            "cold_starts": self.cold_starts,
+            "prewarmed": self.prewarmed,
+            "rejected": self.rejected,
+            "failed": self.failed,
+            "retried": self.retried,
+            "retries_exhausted": self.retries_exhausted,
+        }
+
+
 class MetricsCollector:
-    def __init__(self):
+    def __init__(self, history_max: Optional[int] = None,
+                 sketch_threshold: Optional[int] = None):
         self.completed: List[Invocation] = []
+        self.history_max = history_max
+        self._dropped = 0           # records trimmed off the front
+        self.n_recorded = 0         # monotone completion counter
+        threshold = sketch_threshold if sketch_threshold is not None \
+            else QuantileSketch().threshold
+        self._sketch_threshold = threshold
+        self._overall = _StatBucket(threshold)
+        self._per_runtime: Dict[str, _StatBucket] = {}
+        self._per_tenant: Dict[str, Dict[str, int]] = {}
+        # successful-completion REnd stream for RFast (kept sorted lazily;
+        # sim records arrive in virtual-time order so sorting is a no-op)
+        self._success_ends: List[float] = []
+        self._ends_sorted = True
 
     def record(self, inv: Invocation) -> None:
         assert inv.check_monotone(), f"non-monotone timestamps: {inv}"
         self.completed.append(inv)
+        self.n_recorded += 1
+        self._overall.fold(inv)
+        bucket = self._per_runtime.get(inv.runtime_id)
+        if bucket is None:
+            bucket = self._per_runtime[inv.runtime_id] = \
+                _StatBucket(self._sketch_threshold)
+        bucket.fold(inv)
+        trow = self._per_tenant.get(inv.tenant)
+        if trow is None:
+            trow = self._per_tenant[inv.tenant] = {
+                "n_completed": 0, "r_success": 0, "rejected": 0}
+        trow["n_completed"] += 1
+        if inv.success:
+            trow["r_success"] += 1
+        if inv.rejected:
+            trow["rejected"] += 1
+        if inv.success and inv.r_end is not None:
+            if self._success_ends and inv.r_end < self._success_ends[-1]:
+                self._ends_sorted = False
+            self._success_ends.append(inv.r_end)
+        if self.history_max is not None and \
+                len(self.completed) > 2 * self.history_max:
+            trim = len(self.completed) - self.history_max
+            del self.completed[:trim]
+            self._dropped += trim
 
     # ------------------------------------------------------------------
     @property
@@ -30,7 +143,7 @@ class MetricsCollector:
         return [i for i in self.completed if i.success]
 
     def r_success(self) -> int:
-        return len(self.successes)
+        return self._overall.r_success
 
     def rlats(self) -> List[float]:
         return sorted(i.rlat for i in self.successes if i.rlat is not None)
@@ -58,17 +171,31 @@ class MetricsCollector:
     def window(self, t0: float, t1: Optional[float] = None,
                runtime_id: Optional[str] = None) -> List[Invocation]:
         """Completed invocations whose REnd falls in ``[t0, t1]``
-        (``t1=None`` = no upper bound), optionally for one runtime."""
+        (``t1=None`` = no upper bound), optionally for one runtime.
+        Empty windows are empty lists, never an error.  Only retained
+        history is visible when ``history_max`` is set."""
         return [i for i in self.completed
                 if i.r_end is not None and i.r_end >= t0
                 and (t1 is None or i.r_end <= t1)
                 and (runtime_id is None or i.runtime_id == runtime_id)]
 
+    def window_percentile(self, t0: float, t1: Optional[float] = None,
+                          p: float = 50.0, field: str = "rlat",
+                          runtime_id: Optional[str] = None
+                          ) -> Optional[float]:
+        """Nearest-rank percentile of ``field`` (``rlat``/``elat``) over
+        the successful completions in a window.  ``None`` for an empty
+        window; a single-sample window returns that sample (any ``p``)."""
+        vals = [getattr(i, field) for i in self.window(t0, t1, runtime_id)
+                if i.success and getattr(i, field) is not None]
+        return self.percentile(vals, p)
+
     def since(self, idx: int) -> List[Invocation]:
-        """Completions recorded at list index ``idx`` or later — the
-        incremental cursor telemetry samplers use (records are append-only,
-        so ``since(len_seen)`` is every completion since the last sample)."""
-        return self.completed[idx:]
+        """Completions recorded at monotone index ``idx`` or later — the
+        incremental cursor telemetry samplers use (cursor = the
+        ``n_recorded`` value at the previous sample).  Records already
+        trimmed by ``history_max`` cannot be returned."""
+        return self.completed[max(idx - self._dropped, 0):]
 
     # ------------------------------------------------------------------
     def rfast_timeline(self, step: float = 1.0,
@@ -76,7 +203,10 @@ class MetricsCollector:
                        ) -> List[Tuple[float, float]]:
         """(t, completions in [t-window, t] / window) — per-second moving
         average of successful completions, the paper's RFast."""
-        ends = sorted(i.r_end for i in self.successes if i.r_end is not None)
+        if not self._ends_sorted:
+            self._success_ends.sort()
+            self._ends_sorted = True
+        ends = self._success_ends
         if not ends:
             return []
         out = []
@@ -100,66 +230,36 @@ class MetricsCollector:
 
     # ------------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
-        rl = self.rlats()
-        el = self.elats()
+        o = self._overall
         return {
-            "n_completed": len(self.completed),
-            "r_success": self.r_success(),
+            "n_completed": self.n_recorded,
+            "r_success": o.r_success,
             "rfast_max": self.rfast_max(),
-            "rlat_p50": self.percentile(rl, 50) or 0.0,
-            "rlat_p99": self.percentile(rl, 99) or 0.0,
-            "rlat_max": rl[-1] if rl else 0.0,
-            "elat_p50": self.percentile(el, 50) or 0.0,
-            "cold_starts": sum(1 for i in self.completed if i.cold_start),
-            "prewarmed": sum(1 for i in self.completed if i.prewarmed),
-            "rejected": sum(1 for i in self.completed if i.rejected),
+            "rlat_p50": o.rlat.quantile(50) or 0.0,
+            "rlat_p99": o.rlat.quantile(99) or 0.0,
+            "rlat_max": o.rlat_max,
+            "elat_p50": o.elat.quantile(50) or 0.0,
+            "cold_starts": o.cold_starts,
+            "prewarmed": o.prewarmed,
+            "rejected": o.rejected,
             # failure-path accounting (at-least-once delivery):
             # failed = settled unsuccessfully after actually being tried
             # (sheds are a deliberate policy outcome, counted separately)
-            "failed": sum(1 for i in self.completed
-                          if not i.success and not i.rejected),
-            "retried": sum(i.attempt for i in self.completed),
-            "retries_exhausted": sum(1 for i in self.completed
-                                     if i.retries_exhausted),
+            "failed": o.failed,
+            "retried": o.retried,
+            "retries_exhausted": o.retries_exhausted,
         }
 
     # -- machine-readable dumps (ops tooling / --metrics-out) -----------
     def per_runtime(self) -> Dict[str, Dict[str, float]]:
         """Per-runtime breakdown of the same derived numbers."""
-        out: Dict[str, Dict[str, float]] = {}
-        for rid in sorted({i.runtime_id for i in self.completed}):
-            invs = [i for i in self.completed if i.runtime_id == rid]
-            ok = [i for i in invs if i.success]
-            rl = sorted(i.rlat for i in ok if i.rlat is not None)
-            el = sorted(i.elat for i in ok if i.elat is not None)
-            out[rid] = {
-                "n_completed": len(invs),
-                "r_success": len(ok),
-                "rlat_p50": self.percentile(rl, 50) or 0.0,
-                "rlat_p99": self.percentile(rl, 99) or 0.0,
-                "elat_p50": self.percentile(el, 50) or 0.0,
-                "cold_starts": sum(1 for i in invs if i.cold_start),
-                "prewarmed": sum(1 for i in invs if i.prewarmed),
-                "rejected": sum(1 for i in invs if i.rejected),
-                "failed": sum(1 for i in invs
-                              if not i.success and not i.rejected),
-                "retried": sum(i.attempt for i in invs),
-                "retries_exhausted": sum(1 for i in invs
-                                         if i.retries_exhausted),
-            }
-        return out
+        return {rid: self._per_runtime[rid].row()
+                for rid in sorted(self._per_runtime)}
 
     def per_tenant(self) -> Dict[str, Dict[str, float]]:
         """Per-tenant completion/shed counts (admission accounting)."""
-        out: Dict[str, Dict[str, float]] = {}
-        for tenant in sorted({i.tenant for i in self.completed}):
-            invs = [i for i in self.completed if i.tenant == tenant]
-            out[tenant] = {
-                "n_completed": len(invs),
-                "r_success": sum(1 for i in invs if i.success),
-                "rejected": sum(1 for i in invs if i.rejected),
-            }
-        return out
+        return {tenant: dict(self._per_tenant[tenant])
+                for tenant in sorted(self._per_tenant)}
 
     def to_json(self) -> Dict[str, object]:
         """The full derived-metrics record as one JSON-serializable dict

@@ -52,6 +52,10 @@ class NodeManager:
         self.stalled_until = -1.0    # fault injection: hung until this time
         self.pinned: Set[str] = set()    # min-warm keys exempt from eviction
         self._real_handles: Dict[str, object] = {}   # runtime_key -> setup()
+        # one pending idle-eviction check per (accelerator, runtime_key) —
+        # not one per completion, which would pile a clock event on every
+        # settle at 1M-event scale
+        self._idle_checks: Set[tuple] = set()
         queue.subscribe(self._on_publish)
 
     # ------------------------------------------------------------------
@@ -141,6 +145,10 @@ class NodeManager:
                  if inv.data_ref in self.store else self.store.rtt)
         inv.e_start = inv.n_start + cold_start + fetch
 
+        # pin the delivery this completion belongs to: if the lease is
+        # reaped and the event redelivered (possibly back to *this* node),
+        # inv.attempt advances and the stale closure must be dropped
+        att = inv.attempt
         if rdef.fn is not None:
             # real execution: run now (simulation time advances by wall time)
             data = unwrap_outcome(self.store.get(inv.data_ref)) \
@@ -158,29 +166,33 @@ class NodeManager:
                 result, err = None, repr(e)
             elat = _time.monotonic() - t0
             self.clock.call_at(inv.e_start + elat,
-                               lambda: self._complete(inv, acc, result, err))
+                               lambda: self._complete(inv, acc, result, err,
+                                                      att))
         else:
             elat = prof.sample_elat(self.rng)
             self.clock.call_at(inv.e_start + elat,
-                               lambda: self._complete(inv, acc, None, None))
+                               lambda: self._complete(inv, acc, None, None,
+                                                      att))
 
     # ------------------------------------------------------------------
     def _complete(self, inv: Invocation, acc: Accelerator,
-                  result, err: Optional[str]) -> None:
+                  result, err: Optional[str], attempt: int) -> None:
         if self.dead:
             return          # the crash lost this work; leases redeliver it
         now = self.clock.now()
         if self.stalled:
             # the node is hung: nothing completes until the stall ends
             self.clock.call_at(self.stalled_until,
-                               lambda: self._complete(inv, acc, result, err))
+                               lambda: self._complete(inv, acc, result, err,
+                                                      attempt))
             return
-        if inv.r_end is not None or \
+        if inv.r_end is not None or inv.attempt != attempt or \
                 self.queue.holder_of(inv.inv_id) != self.name:
             # our visibility lease was reaped (the event was redelivered —
-            # and possibly already settled — elsewhere): this is an
-            # at-least-once duplicate completion.  Drop it and free the
-            # slot; the settlement of record belongs to the new holder.
+            # and possibly already settled — elsewhere, or re-taken by this
+            # very node as a newer attempt): an at-least-once duplicate
+            # completion.  Drop it and free the slot; the settlement of
+            # record belongs to the current delivery.
             acc.release()
             self.try_start_work()
             return
@@ -205,8 +217,7 @@ class NodeManager:
         acc.n_executions += 1
         acc.release()
         self.metrics.record(inv)
-        self.clock.call_in(self.idle_timeout,
-                           lambda: self._maybe_scale_to_zero(acc, inv.runtime_key))
+        self._schedule_idle_check(acc, inv.runtime_key)
 
         # paper behaviour: immediately look for a SAME-configuration event
         # to reuse the live instance, then fall back to the general loop.
@@ -235,14 +246,34 @@ class NodeManager:
         self.store.persist_outcome(inv, None, reason)   # for store pollers
         self.metrics.record(inv)
 
+    def _schedule_idle_check(self, acc: Accelerator, runtime_key: str,
+                             at: Optional[float] = None) -> None:
+        # dedup: at most one pending check per (acc, key); a check that
+        # finds the instance not-yet-idle reschedules itself at the exact
+        # eviction time, so eviction still happens at t_last_use + timeout
+        tag = (acc.local_id, runtime_key)
+        if tag in self._idle_checks:
+            return
+        self._idle_checks.add(tag)
+        t = at if at is not None else self.clock.now() + self.idle_timeout
+        self.clock.call_at(
+            t, lambda: self._maybe_scale_to_zero(acc, runtime_key))
+
     def _maybe_scale_to_zero(self, acc: Accelerator, runtime_key: str) -> None:
+        self._idle_checks.discard((acc.local_id, runtime_key))
         if runtime_key in self.pinned:       # min-warm floor holds it
             return
         t_idle = acc.warm.get(runtime_key)
-        if t_idle is not None and \
-                self.clock.now() - t_idle >= self.idle_timeout - 1e-9:
+        if t_idle is None:
+            return                           # evicted / never resident
+        if self.clock.now() - t_idle >= self.idle_timeout - 1e-9:
             acc.evict(runtime_key)
             self._real_handles.pop(runtime_key, None)
+        else:
+            # used since the check was scheduled: re-arm at the time the
+            # instance will actually have been idle for the full timeout
+            self._schedule_idle_check(acc, runtime_key,
+                                      at=t_idle + self.idle_timeout)
 
     # -- control-plane actuation ----------------------------------------
     def prewarm(self, runtime_key: str, acc: Accelerator,

@@ -4,6 +4,18 @@ The paper ships warm-affinity behaviour (scan the queue, prefer events
 whose runtime is already warm; after completion, take a matching event
 first).  FIFO is the ablation baseline; cost-aware is a beyond-paper policy
 exploiting heterogeneous accelerator pricing.
+
+**Indexed picks.**  Candidacy is a property of the *bucket*, not the
+event: whether a node can run an event depends only on its ``runtime_id``
+(registry + accelerator support), and warmth depends only on its
+``runtime_key``.  So every policy picks from the queue's per-runtime /
+per-key bucket heads (``head_for_runtime`` / ``head_for_key``) instead of
+scanning all queued events — O(distinct runtimes × accelerators) per pick
+rather than O(queued events).  The pre-index scan implementations are
+preserved as ``Scan*Scheduler`` reference policies
+(:data:`SCAN_REFERENCE_POLICIES`); the differential suite
+(``tests/test_scale_paths.py``) asserts both produce the identical
+virtual-time schedule.
 """
 from __future__ import annotations
 
@@ -37,12 +49,140 @@ class Scheduler:
         return [a for a in node.accelerators
                 if a.free_slots > 0 and rdef.supports(a.spec.type)]
 
+    # shared helper: oldest runnable bucket head + its first fitting
+    # accelerator (the FIFO rule both fifo and warm's fallback use)
+    def _oldest_runnable(self, queue: ScannableQueue, node: "NodeManager"
+                         ) -> Optional[Tuple[int, Invocation, Accelerator]]:
+        best: Optional[Tuple[int, Invocation, Accelerator]] = None
+        for rid in queue.runtime_ids_present():
+            if rid not in node.registry:
+                continue
+            inv = queue.head_for_runtime(rid)
+            accs = self._candidates(node, inv)
+            if not accs:
+                continue
+            seq = queue.order_key(inv)
+            if best is None or seq < best[0]:
+                best = (seq, inv, accs[0])
+        return best
+
 
 class FifoScheduler(Scheduler):
     """Oldest runnable event, first fitting accelerator — fully cold-start
     blind (the naive baseline the paper's queue-scan behaviour improves)."""
     name = "fifo"
     reuse_on_complete = False
+
+    def pick(self, queue, node, now):
+        """Oldest runnable bucket head on the first accelerator that fits."""
+        best = self._oldest_runnable(queue, node)
+        if best is None:
+            return None
+        _, inv, acc = best
+        queue.take_id(inv.inv_id, now, holder=node.name)
+        return inv, acc
+
+
+class WarmAffinityScheduler(Scheduler):
+    """The paper's policy: scan for events already warm on this node; fall
+    back to the oldest runnable event (which will cold-start)."""
+    name = "warm"
+
+    def pick(self, queue, node, now):
+        """Prefer events warm on this node, else the oldest runnable."""
+        # pass 1: warm match — warmth is a runtime_key property, so the
+        # oldest warm event is the min over warm key-bucket heads
+        best = None
+        for key in queue.runtime_keys_present():
+            inv = queue.head_for_key(key)
+            if inv.runtime_id not in node.registry:
+                continue
+            warm = [a for a in self._candidates(node, inv)
+                    if a.has_warm(key)]
+            if not warm:
+                continue
+            seq = queue.order_key(inv)
+            if best is None or seq < best[0]:
+                best = (seq, inv, warm[0])
+        if best is None:
+            # pass 2: oldest runnable
+            best = self._oldest_runnable(queue, node)
+            if best is None:
+                return None
+        _, inv, acc = best
+        queue.take_id(inv.inv_id, now, holder=node.name)
+        return inv, acc
+
+
+class CostAwareScheduler(Scheduler):
+    """Beyond paper: prefer the cheapest accelerator-seconds per event
+    (cost_per_hour x expected ELat), warm instances get a cold-start credit."""
+    name = "cost"
+
+    def pick(self, queue, node, now):
+        """Cheapest expected accelerator-seconds over all (event, acc).
+
+        Cost depends only on (runtime_id, accelerator, warm(runtime_key)),
+        so it is evaluated once per key bucket; the winning bucket is then
+        searched for its min-(r_start, queue-position) event — the same
+        event the full scan picked, without pricing every queued event.
+        """
+        best_cost = None            # (cost, bucket_key, acc)
+        for key in queue.runtime_keys_present():
+            head = queue.head_for_key(key)
+            if head.runtime_id not in node.registry:
+                continue
+            rdef = node.registry.get(head.runtime_id)
+            for acc in self._candidates(node, head):
+                prof = rdef.profiles.get(acc.spec.type)
+                elat = prof.elat_median_s if prof else 1.0
+                cold = 0.0 if acc.has_warm(key) else \
+                    (prof.cold_start_s if prof else 2.0)
+                cost = (elat + cold) * acc.spec.cost_per_hour / 3600.0
+                if best_cost is None or cost < best_cost[0]:
+                    best_cost = (cost, key, acc)
+        if best_cost is None:
+            return None
+        cost, key, acc = best_cost
+        # equal-cost tie-break matches the scan: min (r_start, position)
+        # over every bucket priced at the winning cost
+        best = None
+        for bkey in queue.runtime_keys_present():
+            head = queue.head_for_key(bkey)
+            if head.runtime_id not in node.registry:
+                continue
+            rdef = node.registry.get(head.runtime_id)
+            accs = self._candidates(node, head)
+            if not accs:
+                continue
+            for bacc in accs:
+                prof = rdef.profiles.get(bacc.spec.type)
+                elat = prof.elat_median_s if prof else 1.0
+                cold = 0.0 if bacc.has_warm(bkey) else \
+                    (prof.cold_start_s if prof else 2.0)
+                bcost = (elat + cold) * bacc.spec.cost_per_hour / 3600.0
+                if bcost > cost:
+                    continue
+                for inv in queue.bucket_for_key(bkey):
+                    cand = ((bcost, inv.r_start or 0.0),
+                            queue.order_key(inv), inv, bacc)
+                    if best is None or cand[:2] < best[:2]:
+                        best = cand
+        if best is None:
+            return None
+        _, _, inv, acc = best
+        queue.take_id(inv.inv_id, now, holder=node.name)
+        return inv, acc
+
+
+# ----------------------------------------------------------------------
+# Scan-based reference policies (pre-index implementations, kept verbatim
+# for the differential suite and as executable documentation of the
+# behaviour the indexed picks must reproduce)
+# ----------------------------------------------------------------------
+class ScanFifoScheduler(FifoScheduler):
+    """Reference O(n)-scan FIFO (the pre-index implementation)."""
+    name = "scan-fifo"
 
     def pick(self, queue, node, now):
         """Oldest runnable event on the first accelerator that fits."""
@@ -57,10 +197,9 @@ class FifoScheduler(Scheduler):
         return None
 
 
-class WarmAffinityScheduler(Scheduler):
-    """The paper's policy: scan for events already warm on this node; fall
-    back to the oldest runnable event (which will cold-start)."""
-    name = "warm"
+class ScanWarmAffinityScheduler(WarmAffinityScheduler):
+    """Reference O(n)-scan warm-affinity (the pre-index implementation)."""
+    name = "scan-warm"
 
     def pick(self, queue, node, now):
         """Prefer events warm on this node, else the oldest runnable."""
@@ -86,10 +225,9 @@ class WarmAffinityScheduler(Scheduler):
         return None
 
 
-class CostAwareScheduler(Scheduler):
-    """Beyond paper: prefer the cheapest accelerator-seconds per event
-    (cost_per_hour x expected ELat), warm instances get a cold-start credit."""
-    name = "cost"
+class ScanCostAwareScheduler(CostAwareScheduler):
+    """Reference O(n·accs)-scan cost-aware (the pre-index implementation)."""
+    name = "scan-cost"
 
     def pick(self, queue, node, now):
         """Cheapest expected accelerator-seconds over all (event, acc)."""
@@ -118,7 +256,18 @@ class CostAwareScheduler(Scheduler):
 POLICIES = {c.name: c for c in
             (FifoScheduler, WarmAffinityScheduler, CostAwareScheduler)}
 
+# the scan references, keyed by the *production* policy name they mirror
+SCAN_REFERENCE_POLICIES = {
+    "fifo": ScanFifoScheduler,
+    "warm": ScanWarmAffinityScheduler,
+    "cost": ScanCostAwareScheduler,
+}
 
-def make_scheduler(name: str) -> Scheduler:
-    """Instantiate a policy by name (``fifo`` / ``warm`` / ``cost``)."""
+
+def make_scheduler(name: str, *, reference_scan: bool = False) -> Scheduler:
+    """Instantiate a policy by name (``fifo`` / ``warm`` / ``cost``).
+    ``reference_scan=True`` returns the pre-index O(n)-scan implementation
+    of the same policy (differential testing / ablation)."""
+    if reference_scan:
+        return SCAN_REFERENCE_POLICIES[name]()
     return POLICIES[name]()

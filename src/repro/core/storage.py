@@ -15,7 +15,9 @@ from __future__ import annotations
 
 import hashlib
 import pickle
-from typing import Any, Dict, Optional, Sequence, Set
+import threading
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Set
 
 # reserved marker key identifying an outcome envelope in the store (the
 # value namespace is the user's; a dict with this key is always ours)
@@ -51,13 +53,26 @@ def unwrap_outcome(obj: Any) -> Any:
 
 
 class ObjectStore:
-    def __init__(self, bandwidth_bps: float = 1.25e9, rtt_s: float = 0.002):
+    def __init__(self, bandwidth_bps: float = 1.25e9, rtt_s: float = 0.002,
+                 outcome_max: Optional[int] = None):
         self._blobs: Dict[str, bytes] = {}
         self._raw: Set[str] = set()      # keys whose payload was put as bytes
         self.bandwidth = bandwidth_bps   # 10 GbE default
         self.rtt = rtt_s
         self.n_puts = 0
         self.n_gets = 0
+        self.n_contains = 0              # membership probes (poll detector)
+        # settlement watchers: key -> one-shot callbacks fired when the key
+        # lands.  Registration and notification share one lock, so a
+        # watcher registered while the key is being put either sees the
+        # blob (fires immediately) or is picked up by the put (no missed
+        # notify either way).
+        self._watch_lock = threading.Lock()
+        self._watchers: Dict[str, List[Callable[[], None]]] = {}
+        # optional FIFO bound on retained outcome records (result:inv*) —
+        # the 1M-event scale path caps resident results; None = keep all
+        self.outcome_max = outcome_max
+        self._outcome_keys: Deque[str] = deque()
 
     # -- data plane ----------------------------------------------------
     def put(self, obj: Any, key: Optional[str] = None) -> str:
@@ -73,7 +88,32 @@ class ObjectStore:
         else:
             self._raw.discard(key)
         self.n_puts += 1
+        self._notify(key)
         return key
+
+    def _notify(self, key: str) -> None:
+        """Fire (and drop) the one-shot watchers registered for ``key``.
+        The blob is already in ``_blobs`` when this runs."""
+        with self._watch_lock:
+            fns = self._watchers.pop(key, None)
+        if fns:
+            for fn in fns:
+                fn()
+
+    def on_settle(self, key: str, fn: Callable[[], None]) -> bool:
+        """Call ``fn`` once when ``key`` lands in the store (completion
+        callback — no polling).  If the key is already present, ``fn``
+        fires immediately; returns True in that case.  ``fn`` runs on
+        whichever thread puts the blob and must not block."""
+        with self._watch_lock:
+            if key in self._blobs:
+                present = True
+            else:
+                self._watchers.setdefault(key, []).append(fn)
+                present = False
+        if present:
+            fn()
+        return present
 
     def get(self, key: str) -> Any:
         self.n_gets += 1
@@ -98,9 +138,11 @@ class ObjectStore:
             self._raw.add(dst_key)
         else:
             self._raw.discard(dst_key)
+        self._notify(dst_key)
         return dst_key
 
     def __contains__(self, key: str) -> bool:
+        self.n_contains += 1
         return key in self._blobs
 
     def size(self, key: str) -> int:
@@ -125,6 +167,12 @@ class ObjectStore:
         a failure are preserved, the error is never dropped)."""
         inv.result_ref = self.put(make_outcome(inv, result, err),
                                   key=f"result:inv{inv.inv_id}")
+        if self.outcome_max is not None:
+            self._outcome_keys.append(inv.result_ref)
+            while len(self._outcome_keys) > self.outcome_max:
+                old = self._outcome_keys.popleft()
+                self._blobs.pop(old, None)
+                self._raw.discard(old)
         return inv.result_ref
 
     def get_outcome(self, ref: str) -> Dict[str, Any]:

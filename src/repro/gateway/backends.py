@@ -203,7 +203,12 @@ class SimBackend(Backend):
 
     def backlog(self) -> int:
         """Submitted events whose completion has not been recorded yet."""
-        return self._n_submitted - len(self.metrics.completed)
+        return self._n_submitted - self.metrics.n_recorded
+
+    def wait(self, inv: Invocation, timeout_s: float = 600.0) -> bool:
+        """Advance the virtual clock until ``inv`` settles (per-event wait
+        — futures no longer fall back to a full drain on the sim)."""
+        return self.wait_any([inv], timeout_s=timeout_s)
 
     def wait_any(self, invs: Sequence[Invocation],
                  timeout_s: float = 600.0) -> bool:
@@ -256,11 +261,9 @@ class SimCapacityHooks(CapacityHooks):
                    for a in n.accelerators)
 
     def backlog_by_runtime(self) -> Dict[str, int]:
-        """Queued events per runtime (from the scannable queue)."""
-        out: Dict[str, int] = {}
-        for inv in self.cluster.queue.scan():
-            out[inv.runtime_id] = out.get(inv.runtime_id, 0) + 1
-        return out
+        """Queued events per runtime (the queue's ready-queue index —
+        O(distinct runtimes), not a scan)."""
+        return self.cluster.queue.counts_by_runtime()
 
     def warm_state(self) -> Dict[str, float]:
         """Min idle seconds per warm runtime_key across accelerators."""
@@ -570,38 +573,41 @@ class EngineBackend(Backend):
             return self._n_pending + self._n_inflight
 
     def drain(self, extra_time_s: float = 600.0) -> None:
-        """Block until the dispatcher is idle (or ``extra_time_s`` elapses)."""
+        """Block until the dispatcher is idle (or ``extra_time_s`` elapses).
+        Event-driven: parks on the settlement condition until notified
+        (every settle path notifies ``_settled``), no poll tick."""
         deadline = time.monotonic() + extra_time_s
         with self._lock:
             while self._n_pending or self._n_inflight:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
                     return
-                self._settled.wait(timeout=min(remaining, 0.25))
+                self._settled.wait(timeout=remaining)
 
     def wait(self, inv: Invocation, timeout_s: float = 600.0) -> bool:
-        """Block until ``inv`` settles (per-event wait — no full drain)."""
+        """Block until ``inv`` settles (per-event wait — no full drain,
+        no poll tick: woken by the settlement condition)."""
         deadline = time.monotonic() + timeout_s
         with self._lock:
             while inv.r_end is None:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
                     break
-                self._settled.wait(timeout=min(remaining, 0.25))
+                self._settled.wait(timeout=remaining)
         return inv.r_end is not None
 
     def wait_any(self, invs: Sequence[Invocation],
                  timeout_s: float = 600.0) -> bool:
         """Block until at least one of ``invs`` settles (workers progress
         in the background); False when ``timeout_s`` wall seconds elapse
-        first."""
+        first.  Woken by the settlement condition, no poll tick."""
         deadline = time.monotonic() + timeout_s
         with self._lock:
             while not any(i.r_end is not None for i in invs):
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
                     return False
-                self._settled.wait(timeout=min(remaining, 0.25))
+                self._settled.wait(timeout=remaining)
         return True
 
     # -- dispatcher ------------------------------------------------------

@@ -1,0 +1,252 @@
+"""Accuracy contract for the streaming quantile layer (PR 6 tentpole).
+
+``QuantileSketch`` must be *bit-identical* to the exact nearest-rank
+percentile below ``EXACT_THRESHOLD`` (so none of the existing bench
+gates move) and rank-accurate within a small tolerance above it, on
+adversarial distributions: uniform, bimodal, heavy-tail, pre-sorted and
+reverse-sorted streams.  ``P2Quantile`` gets direct unit coverage too.
+
+Property layer: hypothesis when available (it is not baked into the
+container image), seeded ``random`` sweeps otherwise.
+"""
+from __future__ import annotations
+
+import math
+import random
+
+import pytest
+
+from repro.core.metrics import MetricsCollector
+from repro.core.quantiles import (DEFAULT_GRID, EXACT_THRESHOLD, P2Quantile,
+                                  QuantileSketch, nearest_rank)
+
+try:                                    # pragma: no cover - optional dep
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+# ----------------------------------------------------------------------
+# stream generators: adversarial shapes for a streaming estimator
+# ----------------------------------------------------------------------
+def _uniform(rng, n):
+    return [rng.uniform(0.0, 100.0) for _ in range(n)]
+
+
+def _bimodal(rng, n):
+    return [rng.gauss(5.0, 0.5) if rng.random() < 0.7
+            else rng.gauss(80.0, 3.0) for _ in range(n)]
+
+
+def _heavy_tail(rng, n):
+    # lognormal: the paper workloads' latency shape (rare huge stragglers)
+    return [rng.lognormvariate(0.0, 1.5) for _ in range(n)]
+
+
+def _sorted_stream(rng, n):
+    return sorted(_uniform(rng, n))
+
+
+def _reversed_stream(rng, n):
+    return sorted(_uniform(rng, n), reverse=True)
+
+
+STREAMS = {
+    "uniform": _uniform,
+    "bimodal": _bimodal,
+    "heavy-tail": _heavy_tail,
+    "sorted": _sorted_stream,
+    "reversed": _reversed_stream,
+}
+
+
+def _rank_error(sample, estimate, p):
+    """|empirical CDF(estimate) - p/100|: rank error of the estimate."""
+    s = sorted(sample)
+    import bisect
+    frac = bisect.bisect_right(s, estimate) / len(s)
+    return abs(frac - p / 100.0)
+
+
+# ----------------------------------------------------------------------
+# exactness below the threshold
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("shape", sorted(STREAMS))
+def test_exact_below_threshold_matches_nearest_rank(shape):
+    rng = random.Random(7)
+    xs = STREAMS[shape](rng, EXACT_THRESHOLD - 1)
+    sk = QuantileSketch()
+    for x in xs:
+        sk.add(x)
+    assert sk.exact
+    for p in (0.0, 1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0):
+        assert sk.quantile(p) == nearest_rank(sorted(xs), p)
+
+
+def test_exact_mode_is_bit_identical_to_metrics_percentile():
+    # the contract that keeps existing bench gates frozen: same floats,
+    # not merely close ones
+    rng = random.Random(11)
+    xs = [rng.lognormvariate(0.5, 0.8) for _ in range(500)]
+    sk = QuantileSketch()
+    for x in xs:
+        sk.add(x)
+    mc = MetricsCollector()
+    for p in (50.0, 90.0, 95.0, 99.0):
+        assert sk.quantile(p) == mc.percentile(xs, p)
+
+
+def test_empty_and_tiny_sketches():
+    sk = QuantileSketch()
+    assert sk.quantile(50) is None
+    assert sk.min is None and sk.max is None
+    sk.add(42.0)
+    assert sk.quantile(0) == sk.quantile(50) == sk.quantile(100) == 42.0
+    assert sk.min == sk.max == 42.0
+
+
+def test_interleaved_add_and_query_stays_exact():
+    # querying re-sorts the buffer; later adds must keep answers exact
+    rng = random.Random(3)
+    sk, seen = QuantileSketch(), []
+    for i in range(600):
+        x = rng.uniform(-5, 5)
+        sk.add(x)
+        seen.append(x)
+        if i % 37 == 0:
+            assert sk.quantile(90) == nearest_rank(sorted(seen), 90)
+    assert sk.quantile(50) == nearest_rank(sorted(seen), 50)
+
+
+# ----------------------------------------------------------------------
+# approximate mode: rank-error bounds on adversarial distributions
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("shape", sorted(STREAMS))
+@pytest.mark.parametrize("p", DEFAULT_GRID)
+def test_sketch_rank_error_bounded_above_threshold(shape, p):
+    rng = random.Random(int(p) * 31 + len(shape))
+    xs = STREAMS[shape](rng, 20_000)
+    sk = QuantileSketch()
+    for x in xs:
+        sk.add(x)
+    assert not sk.exact
+    est = sk.quantile(p)
+    assert est is not None
+    assert sk.min <= est <= sk.max
+    # P² seeded from a 2048-sample exact prefix holds rank error well
+    # under 3 percentile points on i.i.d.-ish streams; fully ordered
+    # streams are the adversarial worst case (the seed sample comes from
+    # one end of the range) and get a documented looser bound
+    tol = 0.10 if shape in ("sorted", "reversed") else 0.03
+    assert _rank_error(xs, est, p) <= tol, \
+        f"{shape} p{p}: rank error {_rank_error(xs, est, p):.4f}"
+
+
+def test_off_grid_query_snaps_to_nearest_estimator():
+    rng = random.Random(5)
+    sk = QuantileSketch()
+    for _ in range(10_000):
+        sk.add(rng.uniform(0, 1))
+    assert not sk.exact
+    # p=91 snaps to the p90 estimator, p=97.6 to p99
+    assert sk.quantile(91.0) == sk.quantile(90.0)
+    assert sk.quantile(97.6) == sk.quantile(99.0)
+
+
+def test_estimates_clamped_to_observed_range():
+    # constant stream: parabolic adjustment can't escape [min, max]
+    sk = QuantileSketch()
+    for _ in range(5000):
+        sk.add(1.0)
+    for p in DEFAULT_GRID:
+        assert sk.quantile(p) == 1.0
+
+
+# ----------------------------------------------------------------------
+# P2Quantile unit behaviour
+# ----------------------------------------------------------------------
+def test_p2_rejects_bad_p():
+    for bad in (0.0, 1.0, -0.1, 2.0):
+        with pytest.raises(ValueError):
+            P2Quantile(bad)
+
+
+def test_p2_small_samples_are_exact_nearest_rank():
+    est = P2Quantile(0.5)
+    assert est.value() is None
+    xs = [9.0, 1.0, 5.0]
+    for x in xs:
+        est.add(x)
+    assert est.count == 3
+    assert est.value() == nearest_rank(sorted(xs), 50.0)
+
+
+def test_p2_median_converges_on_uniform():
+    rng = random.Random(2)
+    est = P2Quantile(0.5)
+    for _ in range(50_000):
+        est.add(rng.uniform(0.0, 1.0))
+    assert abs(est.value() - 0.5) < 0.02
+    assert est.count == 50_000
+
+
+def test_p2_tail_quantile_on_exponential():
+    rng = random.Random(4)
+    est = P2Quantile(0.99)
+    xs = [rng.expovariate(1.0) for _ in range(50_000)]
+    for x in xs:
+        est.add(x)
+    true_p99 = nearest_rank(sorted(xs), 99.0)
+    assert abs(est.value() - true_p99) / true_p99 < 0.15
+
+
+def test_p2_handles_duplicate_heavy_streams():
+    # >5 identical values then a spread: marker gaps guard divisions
+    est = P2Quantile(0.9)
+    for _ in range(100):
+        est.add(3.0)
+    for x in (1.0, 2.0, 4.0, 5.0, 6.0):
+        est.add(x)
+    v = est.value()
+    assert 1.0 <= v <= 6.0 and math.isfinite(v)
+
+
+# ----------------------------------------------------------------------
+# property layer: hypothesis when present, seeded sweep otherwise
+# ----------------------------------------------------------------------
+if HAVE_HYPOTHESIS:                     # pragma: no cover - not in image
+    @given(st.lists(st.floats(min_value=-1e6, max_value=1e6,
+                              allow_nan=False), min_size=1, max_size=400),
+           st.sampled_from([10.0, 50.0, 90.0, 99.0]))
+    @settings(max_examples=200, deadline=None)
+    def test_hypothesis_exact_mode_matches_nearest_rank(xs, p):
+        sk = QuantileSketch()
+        for x in xs:
+            sk.add(x)
+        assert sk.quantile(p) == nearest_rank(sorted(xs), p)
+else:
+    @pytest.mark.parametrize("seed", range(20))
+    def test_seeded_exact_mode_matches_nearest_rank(seed):
+        rng = random.Random(seed)
+        xs = [rng.uniform(-1e6, 1e6)
+              for _ in range(rng.randrange(1, 400))]
+        sk = QuantileSketch()
+        for x in xs:
+            sk.add(x)
+        for p in (10.0, 50.0, 90.0, 99.0):
+            assert sk.quantile(p) == nearest_rank(sorted(xs), p)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("shape", sorted(STREAMS))
+def test_sketch_rank_error_holds_at_200k(shape):
+    rng = random.Random(hash(shape) % 1000)
+    sk = QuantileSketch()
+    xs = STREAMS[shape](rng, 200_000)
+    for x in xs:
+        sk.add(x)
+    tol = 0.10 if shape in ("sorted", "reversed") else 0.03
+    for p in DEFAULT_GRID:
+        assert _rank_error(xs, sk.quantile(p), p) <= tol

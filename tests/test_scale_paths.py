@@ -1,0 +1,553 @@
+"""Differential/property tests for the indexed hot paths (PR 6).
+
+The 1M-event scale work replaced every O(n) core path with an indexed
+one; these suites assert the replacements are *behaviourally invisible*:
+
+* queue: indexed ``take_any``/``take_matching`` pick exactly the event
+  the pre-index scan predicates picked, under randomized op schedules;
+* reaper: the expiry min-heap (``reap``) redelivers the same events, in
+  the same order, with the same ``attempt`` counters as the PR-5 full
+  sweep (``reap_sweep``), under randomized take/ack/kill/stall traffic;
+* scheduler: the bucket-head policies produce the identical virtual-time
+  schedule as the preserved ``Scan*Scheduler`` references on mixed
+  multi-runtime, multi-tenant workloads — including admission sheds,
+  node kill/stall fault schedules, and workflow steps;
+* futures: completion is callback-driven — no store membership polling
+  lands after a submission settles;
+* metrics: empty/single-sample windows are values, not exceptions, and
+  bounded history keeps ``since()`` cursor math correct.
+
+Where the `hypothesis` package is available the randomized suites run
+under it as well; otherwise the seeded-random loops below are the
+property layer (deterministic, reproducible by seed).
+"""
+import dataclasses
+import random
+
+import pytest
+
+from repro.core.cluster import GPU_K600, VPU_NCS, Cluster
+from repro.core.events import Invocation
+from repro.core.metrics import MetricsCollector
+from repro.core.queue import ScannableQueue
+from repro.core.runtime import RuntimeDef, SimProfile
+from repro.faults import inject
+from repro.gateway import Gateway, SimBackend, Workflow
+
+try:
+    import hypothesis  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+RUNTIMES = ("rt-a", "rt-b", "rt-c")
+
+
+def mk_inv(rt="rt-a", t=0.0, config=None, tenant="default"):
+    return Invocation(runtime_id=rt, data_ref="d", r_start=t,
+                      config=config or {}, tenant=tenant)
+
+
+def det_runtime(rid, elat=1.0, cold=2.0, max_attempts=3):
+    """Deterministic (sigma=0) runtime supported on both testbed specs."""
+    return RuntimeDef(
+        runtime_id=rid,
+        profiles={
+            "gpu-k600": SimProfile(elat_median_s=elat, sigma=0.0,
+                                   cold_start_s=cold),
+            "vpu-ncs": SimProfile(elat_median_s=elat * 1.3, sigma=0.0,
+                                  cold_start_s=cold * 1.5),
+        },
+        artifact_bytes=1 << 20,
+        max_attempts=max_attempts,
+    )
+
+
+# ======================================================================
+# queue: indexed takes vs scan-predicate reference
+# ======================================================================
+def _mirrored_queues():
+    qa, qb = ScannableQueue(lease_s=20.0), ScannableQueue(lease_s=20.0)
+    for q in (qa, qb):
+        q.configure_retries(lambda inv: 3, lambda inv, msg: None)
+    return qa, qb
+
+
+def _random_queue_trace(seed, n_ops=200):
+    """Drive identical random op schedules through indexed takes (qa) and
+    the scan-predicate reference (qb); the traces must be identical."""
+    rng = random.Random(seed)
+    qa, qb = _mirrored_queues()
+    trace_a, trace_b = [], []
+    now = 0.0
+    next_id = 0
+    live_a, live_b = [], []         # leased inv_ids per queue
+
+    for _ in range(n_ops):
+        now += rng.random() * 3.0
+        op = rng.random()
+        if op < 0.45:
+            rt = rng.choice(RUNTIMES)
+            cfg = {"v": rng.randrange(2)}
+            for q, mk in ((qa, trace_a), (qb, trace_b)):
+                inv = Invocation(runtime_id=rt, data_ref="d", r_start=now,
+                                 config=dict(cfg))
+                inv.inv_id = next_id        # mirror ids across queues
+                q.publish(inv, now)
+            next_id += 1
+        elif op < 0.65:
+            supported = set(rng.sample(RUNTIMES, rng.randrange(1, 4)))
+            got_a = qa.take_any(supported, now, holder="n0")
+            got_b = qb.take_where(lambda e: e.runtime_id in supported,
+                                  now, holder="n0")
+            trace_a.append(("take_any", got_a and got_a.inv_id))
+            trace_b.append(("take_any", got_b and got_b.inv_id))
+            if got_a is not None:
+                live_a.append(got_a.inv_id)
+            if got_b is not None:
+                live_b.append(got_b.inv_id)
+        elif op < 0.80:
+            key = f"{rng.choice(RUNTIMES)}|v={rng.randrange(2)}"
+            got_a = qa.take_matching(key, now, holder="n0")
+            got_b = qb.take_where(lambda e: e.runtime_key == key,
+                                  now, holder="n0")
+            trace_a.append(("take_matching", got_a and got_a.inv_id))
+            trace_b.append(("take_matching", got_b and got_b.inv_id))
+            if got_a is not None:
+                live_a.append(got_a.inv_id)
+            if got_b is not None:
+                live_b.append(got_b.inv_id)
+        elif op < 0.90 and live_a and live_b:
+            i = rng.randrange(len(live_a))
+            if i < len(live_b):
+                trace_a.append(("ack", qa.ack(live_a.pop(i))))
+                trace_b.append(("ack", qb.ack(live_b.pop(i))))
+        else:
+            req_a = [i.inv_id for i in qa.reap(now)]
+            req_b = [i.inv_id for i in qb.reap_sweep(now)]
+            live_a = [i for i in live_a if qa.holder_of(i) is not None]
+            live_b = [i for i in live_b if qb.holder_of(i) is not None]
+            trace_a.append(("reap", req_a))
+            trace_b.append(("reap", req_b))
+    return qa, qb, trace_a, trace_b
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_indexed_takes_match_scan_reference(seed):
+    qa, qb, trace_a, trace_b = _random_queue_trace(seed)
+    assert trace_a == trace_b
+    assert [i.inv_id for i in qa.scan()] == [i.inv_id for i in qb.scan()]
+    assert (qa.n_taken, qa.n_requeued, qa.n_exhausted, qa.n_leased) == \
+           (qb.n_taken, qb.n_requeued, qb.n_exhausted, qb.n_leased)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(5, 30))
+def test_indexed_takes_match_scan_reference_deep(seed):
+    qa, qb, trace_a, trace_b = _random_queue_trace(seed, n_ops=1500)
+    assert trace_a == trace_b
+    assert [i.inv_id for i in qa.scan()] == [i.inv_id for i in qb.scan()]
+
+
+# ======================================================================
+# reaper: expiry heap vs PR-5 sweep
+# ======================================================================
+def _random_reaper_trace(seed, n_ops=300, max_attempts=2):
+    """Mirror random publish/take/ack/release traffic on two queues and
+    reap one with the heap, the other with the reference sweep."""
+    rng = random.Random(seed)
+    failed_a, failed_b = [], []
+    qa, qb = ScannableQueue(lease_s=5.0), ScannableQueue(lease_s=5.0)
+    qa.configure_retries(lambda inv: max_attempts,
+                         lambda inv, msg: failed_a.append(inv.inv_id))
+    qb.configure_retries(lambda inv: max_attempts,
+                         lambda inv, msg: failed_b.append(inv.inv_id))
+    now = 0.0
+    next_id = 0
+    reaps_a, reaps_b = [], []
+    for _ in range(n_ops):
+        now += rng.random() * 2.0
+        op = rng.random()
+        if op < 0.40:
+            rt = rng.choice(RUNTIMES)
+            for q in (qa, qb):
+                inv = mk_inv(rt, t=now)
+                inv.inv_id = next_id
+                q.publish(inv, now)
+            next_id += 1
+        elif op < 0.70:
+            holder = f"n{rng.randrange(3)}"
+            sup = set(rng.sample(RUNTIMES, rng.randrange(1, 4)))
+            a = qa.take_any(sup, now, holder=holder)
+            b = qb.take_any(sup, now, holder=holder)
+            assert (a and a.inv_id) == (b and b.inv_id)
+        elif op < 0.80:
+            # ack a random live lease (same one on both queues)
+            live = sorted(i for i in range(next_id)
+                          if qa.holder_of(i) is not None)
+            if live:
+                inv_id = rng.choice(live)
+                assert qa.ack(inv_id) == qb.ack(inv_id)
+        elif op < 0.88:
+            holder = f"n{rng.randrange(3)}"       # node death
+            ra = [i.inv_id for i in qa.release_holder(holder, now)]
+            rb = [i.inv_id for i in qb.release_holder(holder, now)]
+            assert ra == rb
+        else:
+            reaps_a.append([i.inv_id for i in qa.reap(now)])
+            reaps_b.append([i.inv_id for i in qb.reap_sweep(now)])
+    # flush everything left
+    reaps_a.append([i.inv_id for i in qa.reap(now + 1e6)])
+    reaps_b.append([i.inv_id for i in qb.reap_sweep(now + 1e6)])
+    return qa, qb, reaps_a, reaps_b, failed_a, failed_b
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_heap_reaper_matches_sweep(seed):
+    qa, qb, reaps_a, reaps_b, failed_a, failed_b = _random_reaper_trace(seed)
+    assert reaps_a == reaps_b       # same events, same order, every reap
+    assert failed_a == failed_b     # same exhaustion decisions
+    assert [i.inv_id for i in qa.scan()] == [i.inv_id for i in qb.scan()]
+    assert (qa.n_requeued, qa.n_exhausted) == (qb.n_requeued, qb.n_exhausted)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(5, 25))
+@pytest.mark.parametrize("max_attempts", (1, 3))
+def test_heap_reaper_matches_sweep_deep(seed, max_attempts):
+    _, _, reaps_a, reaps_b, failed_a, failed_b = _random_reaper_trace(
+        seed, n_ops=1200, max_attempts=max_attempts)
+    assert reaps_a == reaps_b and failed_a == failed_b
+
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+    @settings(max_examples=50, deadline=None)
+    def test_heap_reaper_matches_sweep_hypothesis(seed):
+        _, _, reaps_a, reaps_b, failed_a, failed_b = \
+            _random_reaper_trace(seed, n_ops=400)
+        assert reaps_a == reaps_b and failed_a == failed_b
+
+
+# ======================================================================
+# scheduler: indexed picks vs scan reference, end to end on the sim
+# ======================================================================
+def _build_cluster(reference_scan, policy, seed=0, lease_s=30.0):
+    cl = Cluster(scheduler=policy, seed=seed, lease_s=lease_s,
+                 reference_scan_scheduler=reference_scan)
+    cl.add_node("n0", [GPU_K600, VPU_NCS])
+    cl.add_node("n1", [GPU_K600])
+    for rid, elat in zip(RUNTIMES, (0.8, 1.4, 0.3)):
+        cl.register_runtime(det_runtime(rid, elat=elat))
+    cl.store.put(b"\0" * 4096, key="d")
+    return cl
+
+
+def _mixed_workload(seed, n=120):
+    """Mixed multi-runtime, multi-tenant arrivals with two configs per
+    runtime (distinct runtime_keys) over a bursty arrival process."""
+    rng = random.Random(seed)
+    invs = []
+    t = 0.0
+    for i in range(n):
+        t += rng.expovariate(2.0) if rng.random() < 0.8 else 3.0
+        invs.append(dict(rt=rng.choice(RUNTIMES),
+                         t=round(t, 4),
+                         config={"v": rng.randrange(2)},
+                         tenant=f"tenant{rng.randrange(3)}"))
+    return invs
+
+
+def _schedule_of(cluster):
+    """inv_id -> the full virtual-time schedule tuple for comparison."""
+    return {
+        i.inv_id: (i.runtime_id, i.tenant, i.node, i.accelerator,
+                   i.n_start, i.e_start, i.e_end, i.n_end, i.r_end,
+                   i.attempt, i.success, i.rejected, i.retries_exhausted)
+        for i in cluster.metrics.completed
+    }
+
+
+def _run_pair(policy, seed, *, gate=False, fault_spec=None, n=120):
+    scheds = []
+    for reference in (False, True):
+        cl = _build_cluster(reference, policy, seed=seed)
+        base_id = None
+        for spec in _mixed_workload(seed, n=n):
+            inv = mk_inv(spec["rt"], t=spec["t"], config=dict(spec["config"]),
+                         tenant=spec["tenant"])
+            # normalize ids across the pair (the Invocation id counter is
+            # process-global)
+            if base_id is None:
+                base_id = inv.inv_id
+            inv.inv_id -= base_id
+            g = None
+            if gate:
+                g = lambda i: ("quota" if i.inv_id % 7 == 3 else None)  # noqa: E731
+            cl.submit(inv, gate=g)
+        inj = None
+        if fault_spec is not None:
+            inj = inject(cl, fault_spec, reap_interval_s=1.0)
+        cl.drain()
+        if inj is not None:
+            inj.disarm()
+        scheds.append(_schedule_of(cl))
+    return scheds
+
+
+@pytest.mark.parametrize("policy", ("fifo", "warm", "cost"))
+def test_indexed_scheduler_identical_schedule(policy):
+    indexed, reference = _run_pair(policy, seed=7)
+    assert indexed == reference
+    assert len(indexed) == 120      # every event settled
+
+
+@pytest.mark.parametrize("policy", ("fifo", "warm", "cost"))
+def test_indexed_scheduler_identical_with_admission_sheds(policy):
+    indexed, reference = _run_pair(policy, seed=11, gate=True)
+    assert indexed == reference
+    assert any(v[11] for v in indexed.values())     # some sheds occurred
+
+
+@pytest.mark.parametrize("policy", ("fifo", "warm"))
+def test_indexed_scheduler_identical_under_faults(policy):
+    spec = [{"at": 6.0, "op": "kill-node", "node": "n1"},
+            {"at": 12.0, "op": "stall-node", "node": "n0",
+             "duration_s": 45.0}]
+    indexed, reference = _run_pair(policy, seed=3, fault_spec=spec)
+    assert indexed == reference
+    retried = sum(1 for v in indexed.values() if v[9] > 0)
+    assert retried >= 1             # the faults actually lost deliveries
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ("fifo", "warm", "cost"))
+@pytest.mark.parametrize("seed", range(20, 28))
+def test_indexed_scheduler_identical_schedule_deep(policy, seed):
+    indexed, reference = _run_pair(policy, seed=seed, gate=(seed % 2 == 0),
+                                   n=400)
+    assert indexed == reference
+
+
+def test_workflow_steps_identical_on_indexed_core():
+    """A chain + fan-out workflow settles identically on the indexed and
+    scan-reference schedulers (step outputs and step timing)."""
+    outs = []
+    for reference in (False, True):
+        cl = _build_cluster(reference, "warm", seed=5)
+        gw = Gateway(SimBackend(cluster=cl))
+        wf = Workflow("scale-diff")
+        fan = wf.fan_out("shard", "rt-c", [None] * 4)
+        red = wf.step("reduce", "rt-b", after=fan)
+        wf.step("tail", "rt-a", after=red)
+        wff = gw.submit_workflow(wf)
+        wff.result(extra_time_s=600.0)
+        outs.append(sorted(
+            (i.runtime_id, i.n_start, i.r_end, i.success)
+            for i in cl.metrics.completed))
+    assert outs[0] == outs[1]
+    assert len(outs[0]) == 6        # 1 + 4 + 1 steps settled
+
+
+# ======================================================================
+# reaper equivalence end-to-end: heap vs sweep under fault schedules
+# ======================================================================
+@pytest.mark.parametrize("seed", (0, 1))
+def test_reaper_heap_vs_sweep_under_kill_stall_schedule(seed):
+    """Full-cluster differential: the injector's reap tick driven by the
+    heap on one cluster and by the PR-5 sweep on the other, under a
+    kill + stall schedule — identical settlement, attempts, counters."""
+    spec = [{"at": 2.0, "op": "kill-node", "node": "n1"},
+            {"at": 8.0, "op": "stall-node", "node": "n0",
+             "duration_s": 40.0}]
+    results = []
+    for use_sweep in (False, True):
+        cl = _build_cluster(False, "warm", seed=seed, lease_s=6.0)
+        if use_sweep:
+            cl.queue.reap = cl.queue.reap_sweep     # reference reaper
+        base_id = None
+        for s in _mixed_workload(seed, n=60):
+            inv = mk_inv(s["rt"], t=s["t"], config=dict(s["config"]),
+                         tenant=s["tenant"])
+            if base_id is None:
+                base_id = inv.inv_id
+            inv.inv_id -= base_id
+            cl.submit(inv)
+        inj = inject(cl, spec, reap_interval_s=0.5)
+        cl.drain()
+        inj.disarm()
+        results.append((_schedule_of(cl), cl.queue.n_requeued,
+                        cl.queue.n_exhausted,
+                        cl.metrics.summary()["retried"]))
+    assert results[0] == results[1]
+    assert results[0][1] >= 1       # redeliveries actually happened
+
+
+# ======================================================================
+# engine: randomized worker crashes keep the at-least-once invariants
+# ======================================================================
+@pytest.mark.parametrize("seed", (0, 1))
+def test_engine_randomized_crashes_all_settle(seed):
+    import time as _time
+    from repro.gateway import EngineBackend
+
+    rng = random.Random(seed)
+
+    def fn(data, cfg):
+        _time.sleep(0.01)
+        return (data or {}).get("i")
+
+    eb = EngineBackend(n_workers=2, max_batch=4, batch_wait_s=0.002,
+                       monitor_interval_s=0.02)
+    gw = Gateway(eb)
+    gw.register(RuntimeDef(
+        runtime_id="slow",
+        profiles={"host-jax": SimProfile(elat_median_s=0.01)},
+        fn=fn, max_attempts=3))
+    n = 40
+    futs = gw.map("slow", [{"i": i} for i in range(n)])
+    for _ in range(3):              # crash random workers mid-traffic
+        _time.sleep(rng.random() * 0.05)
+        eb.crash_worker(rng.randrange(2))
+    gw.drain(extra_time_s=60.0)
+    m = eb.metrics
+    assert m.n_recorded == n        # none stranded
+    s = m.summary()
+    assert s["r_success"] + s["failed"] + s["rejected"] == n
+    assert all(f.done() for f in futs)
+    eb.shutdown()
+
+
+# ======================================================================
+# futures: callback wakeups, no store polling after settle (satellite 1)
+# ======================================================================
+def test_future_no_store_polling_after_settle_sim():
+    cl = _build_cluster(False, "warm", seed=0)
+    gw = Gateway(SimBackend(cluster=cl))
+    fut = gw.invoke("rt-a", None)
+    assert fut.result() is None     # profile runtime returns no value
+    probes_before = cl.store.n_contains
+    for _ in range(50):
+        assert fut.poll()
+        assert fut.done()
+    assert fut.result() is None     # repeated result() re-reads, no probes
+    assert cl.store.n_contains == probes_before
+
+
+def test_future_no_store_polling_during_engine_wait():
+    import time as _time
+    from repro.gateway import EngineBackend
+
+    def fn(data, cfg):
+        _time.sleep(0.05)
+        return 42
+
+    eb = EngineBackend(n_workers=1)
+    gw = Gateway(eb)
+    gw.register(RuntimeDef(
+        runtime_id="r",
+        profiles={"host-jax": SimProfile(elat_median_s=0.05)},
+        fn=fn))
+    fut = gw.invoke("r", None)
+    before = eb.store.n_contains
+    assert fut.result() == 42       # blocks ~50 ms on the settle condition
+    during = eb.store.n_contains - before
+    # the wait itself must not probe the store; the engine's own data-ref
+    # check contributes a bounded constant, never a poll loop
+    assert during <= 2
+    before = eb.store.n_contains
+    for _ in range(50):
+        assert fut.poll() and fut.result() == 42
+    assert eb.store.n_contains == before
+    eb.shutdown()
+
+
+def test_future_done_callback_fires_on_settle():
+    import time as _time
+    from repro.gateway import EngineBackend
+
+    def fn(data, cfg):
+        _time.sleep(0.02)
+        return "ok"
+
+    eb = EngineBackend(n_workers=1)
+    gw = Gateway(eb)
+    gw.register(RuntimeDef(
+        runtime_id="r",
+        profiles={"host-jax": SimProfile(elat_median_s=0.02)},
+        fn=fn))
+    fired = []
+    fut = gw.invoke("r", None)
+    fut.add_done_callback(lambda f: fired.append(f.inv_id))
+    assert fut.result() == "ok"
+    assert fired == [fut.inv_id]
+    # a callback added after settlement fires immediately
+    fut.add_done_callback(lambda f: fired.append(-f.inv_id))
+    assert fired == [fut.inv_id, -fut.inv_id]
+    eb.shutdown()
+
+
+# ======================================================================
+# metrics: window/since edge cases + bounded history (satellite 2)
+# ======================================================================
+def _settled_inv(rt="rt-a", t0=0.0, elat=1.0, tenant="default"):
+    inv = mk_inv(rt, t=t0, tenant=tenant)
+    inv.n_start = t0 + 0.01
+    inv.e_start = inv.n_start + 0.01
+    inv.e_end = inv.e_start + elat
+    inv.n_end = inv.e_end + 0.01
+    inv.r_end = inv.n_end + 0.01
+    inv.success = True
+    return inv
+
+
+def test_empty_and_single_sample_windows_are_values_not_errors():
+    m = MetricsCollector()
+    assert m.window(0.0, 10.0) == []
+    assert m.window_percentile(0.0, 10.0, p=99) is None
+    assert m.since(0) == [] and m.since(10) == []
+    assert m.percentile([], 50) is None
+    inv = _settled_inv(t0=1.0, elat=2.0)
+    m.record(inv)
+    assert m.window(0.0, 10.0) == [inv]
+    assert m.window(50.0, 60.0) == []               # empty later window
+    for p in (0.0, 1.0, 50.0, 99.0, 100.0):
+        assert m.window_percentile(0.0, 10.0, p=p) == inv.rlat
+    assert m.window_percentile(0.0, 10.0, p=50, field="elat") == inv.elat
+    assert m.since(0) == [inv] and m.since(1) == []
+
+
+def test_bounded_history_keeps_since_cursor_and_summaries_exact():
+    m = MetricsCollector(history_max=10)
+    invs = [_settled_inv(t0=float(i)) for i in range(50)]
+    for inv in invs:
+        m.record(inv)
+    assert m.n_recorded == 50
+    assert len(m.completed) <= 20           # bounded (2x trim hysteresis)
+    # summary counters stream — unaffected by the trim
+    s = m.summary()
+    assert s["n_completed"] == 50 and s["r_success"] == 50
+    # the since() cursor protocol: a reader that last saw n_recorded=48
+    # gets exactly the records after it
+    assert [i.inv_id for i in m.since(48)] == [invs[48].inv_id,
+                                               invs[49].inv_id]
+    assert m.since(50) == []
+
+
+def test_percentiles_exact_below_sketch_threshold():
+    m = MetricsCollector()
+    rng = random.Random(0)
+    lats = []
+    for i in range(300):
+        e = rng.random() * 3.0
+        lats.append(e)
+        m.record(_settled_inv(t0=float(i) * 5.0, elat=e))
+    s = m.summary()
+    rl = m.rlats()
+    assert s["rlat_p50"] == m.percentile(rl, 50)    # bit-identical
+    assert s["rlat_p99"] == m.percentile(rl, 99)
+    assert s["rlat_max"] == rl[-1]
+    per = m.per_runtime()["rt-a"]
+    assert per["rlat_p50"] == s["rlat_p50"]
