@@ -240,6 +240,26 @@ def _sec_scale() -> Dict[str, Any]:
     return s
 
 
+def _sec_cluster() -> Dict[str, Any]:
+    # --- multi-process master/worker deployment (docs/cluster.md) ------
+    from benchmarks.bench_cluster import bench as cluster_bench
+    t0 = time.perf_counter()
+    c = cluster_bench()
+    us = (time.perf_counter() - t0) * 1e6 / 2
+    s = c["scaling"]
+    _row("cluster_scaling_speedup", us,
+         f"4w={s['w4']['events_per_s']:.0f}/s "
+         f"1w={s['w1']['events_per_s']:.0f}/s "
+         f"speedup={s['speedup_4w_vs_1w']:.2f}x "
+         f"(acceptance floor 2x)")
+    k = c["sigkill"]
+    _row("cluster_sigkill_goodput", us,
+         f"goodput={k['goodput']}/{k['submitted']} "
+         f"workers_lost={k['workers_lost']} requeued={k['requeued']} "
+         f"all_settled={int(k['all_settled'])}")
+    return c
+
+
 SECTIONS: List[Tuple[str, Callable[[], Dict[str, Any]]]] = [
     ("scaling", _sec_scaling),
     ("elat", _sec_elat),
@@ -250,6 +270,7 @@ SECTIONS: List[Tuple[str, Callable[[], Dict[str, Any]]]] = [
     ("coldstart", _sec_coldstart),
     ("controlplane", _sec_controlplane),
     ("faults", _sec_faults),
+    ("cluster", _sec_cluster),
     ("serving", _sec_serving),
     ("roofline", _sec_roofline),
     ("scale", _sec_scale),

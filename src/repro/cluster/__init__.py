@@ -1,0 +1,30 @@
+"""Multi-process serving cluster (master / workers / keeper over RPC).
+
+The distributed deployment of the Hardless architecture: one master
+process owns the shared state (scannable queue, object store, metrics,
+control plane hooks, lease reaper), N worker processes own local JAX
+devices and run the micro-batching dispatcher loop, and a small
+versioned-JSON-frame RPC protocol connects them.  The gateway client
+drives it all through :class:`ClusterBackend` — the same ``Backend``
+protocol the thread-mode backends implement, so client code is
+unchanged.  See ``docs/cluster.md``.
+"""
+from repro.cluster.backend import (ClusterBackend, ClusterCapacityHooks,
+                                   ClusterHandle, MirrorStore,
+                                   WorkerLauncher, start_cluster)
+from repro.cluster.keeper import HeartbeatKeeper
+from repro.cluster.master import Master
+from repro.cluster.rpc import (RPC_VERSION, RpcClient, RpcError,
+                               RpcProtocolError, RpcServer)
+from repro.cluster.runtimes import load_runtime_spec
+from repro.cluster.transport import (InProcTransport, MasterTransport,
+                                     RpcTransport)
+from repro.cluster.worker import Worker
+
+__all__ = [
+    "ClusterBackend", "ClusterCapacityHooks", "ClusterHandle",
+    "HeartbeatKeeper", "InProcTransport", "Master", "MasterTransport",
+    "MirrorStore", "RPC_VERSION", "RpcClient", "RpcError",
+    "RpcProtocolError", "RpcServer", "RpcTransport", "Worker",
+    "WorkerLauncher", "load_runtime_spec", "start_cluster",
+]

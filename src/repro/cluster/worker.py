@@ -1,0 +1,309 @@
+"""The cluster worker process: a node manager over local JAX devices.
+
+Each worker owns its own Python interpreter (its own GIL) and its own
+local devices, and runs the PR-2 micro-batching dispatcher loop against
+the master instead of an in-process queue:
+
+    take (long-poll, leases granted master-side)
+      -> fetch input blobs (RPC ``get``, small local cache)
+      -> acquire the warm ``setup()`` handle (LRU, exactly the engine
+         backend's warm-pool semantics)
+      -> ``run_batch`` (one batched call or per-event fns)
+      -> settle (outcome envelopes; refusals — another attempt settled
+         first — are counted and dropped, never retried)
+
+A second connection runs the **heartbeat** thread: every ``heartbeat_s``
+it posts liveness + dispatcher stats and applies the control-plane
+directives the master returns (prewarm / evict / pin).  If the worker
+process dies — SIGKILL included — the beats stop, the master's keeper
+expires it, and its leased events requeue for the surviving workers:
+the at-least-once path the fault benches exercise with real process
+death.
+
+Timestamps are reported on the master clock (offset learned at hello).
+Run directly:
+
+    python -m repro.cluster.worker --master 127.0.0.1:7000 --name w0
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pickle
+import threading
+import time
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional
+
+from repro.core.events import Invocation
+from repro.core.runtime import RuntimeRegistry, run_batch
+from repro.core.storage import make_outcome, unwrap_outcome
+from repro.cluster.rpc import (RpcClient, decode_blob, encode_blob,
+                               inv_from_wire)
+from repro.cluster.runtimes import load_runtime_spec
+
+DATA_CACHE_MAX = 64
+
+
+class Worker:
+    """One dispatcher process serving micro-batches from the master."""
+
+    def __init__(self, addr: str, name: str, *, max_batch: int = 8,
+                 heartbeat_s: float = 1.0, max_warm: int = 8,
+                 connect_timeout_s: float = 10.0):
+        self.addr = addr
+        self.name = name
+        self.max_batch = max(int(max_batch), 1)
+        self.heartbeat_s = max(float(heartbeat_s), 0.05)
+        self.max_warm = max(int(max_warm), 1)
+        # two connections: the take/settle loop and the heartbeat thread
+        # (one outstanding request per connection — see rpc.py)
+        self._main = RpcClient(addr, connect_timeout_s=connect_timeout_s)
+        self._hb = RpcClient(addr, connect_timeout_s=connect_timeout_s)
+        hello = self._main.request("hello", role="worker", name=name)
+        # master-clock conversion: now() = local monotonic + offset
+        self._offset = hello["now"] - time.monotonic()
+        self._catalog_version = -1
+        self.registry = RuntimeRegistry()
+        self._lock = threading.Lock()       # handles/pins vs heartbeat
+        self._handles: "OrderedDict[str, Any]" = OrderedDict()
+        self._pinned: set = set()
+        self._prewarmed: set = set()        # installed by directive, unserved
+        self._data_cache: "OrderedDict[str, Any]" = OrderedDict()
+        self._stop = threading.Event()
+        self._beat_now = threading.Event()  # nudge after each settle
+        self.n_batches = 0
+        self.n_cold_starts = 0
+        self.n_warm_starts = 0
+        self.n_prewarms = 0
+        self.n_settled = 0
+        self.n_settle_refused = 0
+
+    def now(self) -> float:
+        """Current time on the master clock."""
+        return time.monotonic() + self._offset
+
+    # -- catalogue sync --------------------------------------------------
+    def _sync_runtimes(self) -> None:
+        """Pull the (spec, kwargs) catalogue and build local definitions
+        (imports the factories — this is where jit-heavy runtimes load)."""
+        rsp = self._main.request("runtime_specs")
+        if rsp["catalog_version"] == self._catalog_version:
+            return
+        for entry in rsp["specs"]:
+            rdef = load_runtime_spec(entry["spec"], entry.get("kwargs"))
+            if rdef.runtime_id not in self.registry:
+                self.registry.register(rdef)
+        self._catalog_version = rsp["catalog_version"]
+
+    # -- main loop -------------------------------------------------------
+    def run(self) -> None:
+        """Serve until the master shuts down (or disappears)."""
+        self._sync_runtimes()
+        hb = threading.Thread(target=self._heartbeat_loop,
+                              name=f"{self.name}-heartbeat", daemon=True)
+        hb.start()
+        try:
+            while not self._stop.is_set():
+                try:
+                    rsp = self._main.request(
+                        "take", worker=self.name,
+                        supported=self.registry.ids(),
+                        max_batch=self.max_batch, timeout_s=5.0)
+                except ConnectionError:
+                    break               # master gone — nothing left to serve
+                if rsp.get("shutdown"):
+                    break
+                if rsp["catalog_version"] != self._catalog_version:
+                    self._sync_runtimes()
+                events = rsp.get("events") or []
+                if events:
+                    self._execute_batch([inv_from_wire(e) for e in events])
+        finally:
+            self._stop.set()
+            self._beat_now.set()        # wake the heartbeat thread to exit
+            self._main.close()
+            self._hb.close()
+
+    def stop(self) -> None:
+        """Ask the loop to exit after its current batch (thread hosting)."""
+        self._stop.set()
+        self._beat_now.set()
+
+    # -- data plane ------------------------------------------------------
+    def _fetch(self, ref: str) -> Any:
+        """Input blob by ref via RPC, through a small local LRU cache."""
+        if not ref:
+            return None
+        with self._lock:
+            if ref in self._data_cache:
+                self._data_cache.move_to_end(ref)
+                return self._data_cache[ref]
+        rsp = self._main.request("get", key=ref)
+        blob = decode_blob(rsp["blob"])
+        value = blob if rsp.get("raw") else pickle.loads(blob)
+        with self._lock:
+            self._data_cache[ref] = value
+            while len(self._data_cache) > DATA_CACHE_MAX:
+                self._data_cache.popitem(last=False)
+        return value
+
+    # -- warm pool (the engine backend's semantics, process-local) -------
+    def _acquire_handle(self, rdef, key: str):
+        """(handle, cold, prewarmed, err) with LRU insert on cold."""
+        if rdef.setup is None:
+            self.n_cold_starts += 1
+            return None, True, False, None
+        with self._lock:
+            if key in self._handles:
+                self.n_warm_starts += 1
+                self._handles.move_to_end(key)
+                prewarmed = key in self._prewarmed
+                self._prewarmed.discard(key)
+                return self._handles[key], False, prewarmed, None
+            self.n_cold_starts += 1
+        try:
+            handle = rdef.setup()       # slow: jit + weights, unlocked
+        except Exception as e:  # noqa: BLE001 — settles as unsuccessful
+            return None, True, False, f"cold-start failed: {e!r}"
+        with self._lock:
+            self._handles[key] = handle
+            self._evict_over_budget_locked()
+        return handle, True, False, None
+
+    def _evict_over_budget_locked(self) -> None:
+        while len(self._handles) > self.max_warm:
+            victim = next((k for k in self._handles
+                           if k not in self._pinned), None)
+            if victim is None:
+                break
+            self._handles.pop(victim, None)
+            self._prewarmed.discard(victim)
+
+    # -- execution -------------------------------------------------------
+    def _execute_batch(self, batch: List[Invocation]) -> None:
+        rdef = self.registry.get(batch[0].runtime_id)
+        key = batch[0].runtime_key
+        handle, cold, prewarmed, err = self._acquire_handle(rdef, key)
+        datas = [unwrap_outcome(self._fetch(inv.data_ref))
+                 for inv in batch]
+        e_start = self.now()
+        results: List[Any] = [None] * len(batch)
+        if err is None:
+            try:
+                results = run_batch(rdef, datas,
+                                    dict(batch[0].config, handle=handle))
+            except Exception as e:  # noqa: BLE001 — unsuccessful events
+                err = repr(e)
+        e_end = self.now()
+        self.n_batches += 1
+
+        records = []
+        acc = f"{self.name}/pid{os.getpid()}"
+        for inv, result in zip(batch, results):
+            inv.success = err is None
+            inv.error = err
+            blob = pickle.dumps(make_outcome(inv, result, err))
+            records.append({
+                "inv_id": inv.inv_id,
+                "blob": encode_blob(blob),
+                "fields": {"e_start": e_start, "e_end": e_end,
+                           "success": err is None, "error": err,
+                           "cold_start": cold, "prewarmed": prewarmed,
+                           "node": self.name, "accelerator": acc},
+            })
+        try:
+            rsp = self._main.request("settle", worker=self.name,
+                                     records=records)
+        except ConnectionError:
+            self._stop.set()            # master gone mid-settle
+            return
+        for r in rsp.get("results", ()):
+            if r.get("accepted"):
+                self.n_settled += 1
+            else:
+                # first-settlement-wins: another attempt beat this one
+                # (our lease expired mid-batch) — drop, never retry
+                self.n_settle_refused += 1
+        # nudge the heartbeat so the master's stats reflect this batch
+        # immediately, not one beat interval later
+        self._beat_now.set()
+
+    # -- heartbeats / directives -----------------------------------------
+    def _stats(self) -> Dict[str, Any]:
+        with self._lock:
+            warm_keys = list(self._handles)
+        return {"pid": os.getpid(), "n_batches": self.n_batches,
+                "n_cold_starts": self.n_cold_starts,
+                "n_warm_starts": self.n_warm_starts,
+                "n_prewarms": self.n_prewarms,
+                "n_settled": self.n_settled,
+                "n_settle_refused": self.n_settle_refused,
+                "warm_keys": warm_keys}
+
+    def _heartbeat_loop(self) -> None:
+        while True:
+            self._beat_now.wait(self.heartbeat_s)
+            self._beat_now.clear()
+            if self._stop.is_set():
+                return
+            try:
+                rsp = self._hb.request("heartbeat", worker=self.name,
+                                       stats=self._stats())
+            except ConnectionError:
+                self._stop.set()
+                return
+            for d in rsp.get("directives", ()):
+                try:
+                    self._apply_directive(d)
+                except Exception:   # noqa: BLE001 — directives best-effort
+                    pass
+
+    def _apply_directive(self, d: Dict[str, Any]) -> None:
+        """Apply one control-plane directive (prewarm / evict / pin)."""
+        op = d.get("op")
+        if op == "prewarm":
+            self._sync_runtimes()
+            rdef = self.registry.get(d["runtime_id"])
+            if rdef.setup is None:
+                return
+            from repro.core.events import runtime_key_for
+            key = runtime_key_for(d["runtime_id"], d.get("config"))
+            with self._lock:
+                if key in self._handles:
+                    return
+            handle = rdef.setup()       # off the take/settle path
+            with self._lock:
+                if key not in self._handles:
+                    self._handles[key] = handle
+                    self._prewarmed.add(key)
+                    self.n_prewarms += 1
+                    self._evict_over_budget_locked()
+        elif op == "evict":
+            with self._lock:
+                if d["runtime_key"] not in self._pinned:
+                    self._handles.pop(d["runtime_key"], None)
+                    self._prewarmed.discard(d["runtime_key"])
+        elif op == "pin":
+            with self._lock:
+                self._pinned = set(d.get("keys", ()))
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    """CLI entry point: ``python -m repro.cluster.worker --master ...``."""
+    ap = argparse.ArgumentParser(
+        description="Hardless cluster worker process")
+    ap.add_argument("--master", required=True, metavar="HOST:PORT")
+    ap.add_argument("--name", default=f"w{os.getpid()}")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--heartbeat-s", type=float, default=1.0)
+    ap.add_argument("--max-warm", type=int, default=8)
+    args = ap.parse_args(argv)
+    worker = Worker(args.master, args.name, max_batch=args.max_batch,
+                    heartbeat_s=args.heartbeat_s, max_warm=args.max_warm)
+    worker.run()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,12 +14,17 @@ A fault spec is a list of actions:
   the next time it picks a batch, stranding the batch mid-flight — the
   engine's worker monitor must detect the dead thread, requeue-or-fail
   the batch, and respawn to target.
+* ``kill-worker-process`` — cluster: SIGKILL worker *process* ``worker``
+  (its launcher index) — real process death, not thread death.  Its
+  heartbeats stop, the master's keeper expires it, and its leased events
+  requeue for the surviving workers (``docs/cluster.md``).
 
 Specs parse from JSON (``launch.serve --fault-spec``)::
 
     [{"at": 5.0, "op": "kill-node", "node": "pod0"},
      {"at": 2.0, "op": "stall-node", "node": "pod1", "duration_s": 90.0},
-     {"at": 0.5, "op": "crash-worker", "worker": 0}]
+     {"at": 0.5, "op": "crash-worker", "worker": 0},
+     {"at": 0.5, "op": "kill-worker-process", "worker": 1}]
 
 ``FaultInjector.arm()`` schedules the actions — clock callbacks on the
 sim (virtual time, deterministic), timers on the engine (wall time) —
@@ -35,7 +40,8 @@ from typing import Any, Dict, List, Optional, Sequence, Union
 
 SIM_OPS = {"kill-node", "stall-node"}
 ENGINE_OPS = {"crash-worker"}
-ALL_OPS = SIM_OPS | ENGINE_OPS
+CLUSTER_OPS = {"kill-worker-process"}
+ALL_OPS = SIM_OPS | ENGINE_OPS | CLUSTER_OPS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,9 +49,10 @@ class FaultAction:
     """One scheduled fault (``at`` is seconds on the backend's clock)."""
 
     at: float
-    op: str                          # kill-node | stall-node | crash-worker
+    op: str     # kill-node | stall-node | crash-worker | kill-worker-process
     node: Optional[str] = None       # sim ops: target node name
-    worker: int = 0                  # crash-worker: dispatcher worker index
+    worker: int = 0                  # crash-worker: dispatcher worker index;
+    #                                  kill-worker-process: launcher index
     duration_s: float = 0.0          # stall-node: how long the hang lasts
 
     def __post_init__(self):
@@ -83,9 +90,15 @@ class FaultInjector:
         self.n_reaped = 0                   # leases expired -> redelivered
         self._armed = False
         self._timers: List[threading.Timer] = []
-        self.cluster = getattr(backend, "cluster", None)
-        if self.cluster is None and hasattr(backend, "queue"):
-            self.cluster = backend          # a bare Cluster
+        # a ClusterBackend exposes its process launcher — that is the
+        # kill-worker-process actuator (real SIGKILL, not thread death)
+        self.launcher = getattr(backend, "launcher", None)
+        self.is_cluster = self.launcher is not None
+        self.cluster = None
+        if not self.is_cluster:
+            self.cluster = getattr(backend, "cluster", None)
+            if self.cluster is None and hasattr(backend, "queue"):
+                self.cluster = backend      # a bare Cluster
         self.is_sim = self.cluster is not None
 
     # ------------------------------------------------------------------
@@ -96,21 +109,24 @@ class FaultInjector:
         if self._armed:
             return self
         self._armed = True
-        bad = [a.op for a in self.actions if a.op not in
-               (SIM_OPS if self.is_sim else ENGINE_OPS)]
+        kind = "sim" if self.is_sim else \
+            "cluster" if self.is_cluster else "engine"
+        valid = {"sim": SIM_OPS, "cluster": CLUSTER_OPS,
+                 "engine": ENGINE_OPS}[kind]
+        bad = [a.op for a in self.actions if a.op not in valid]
         if bad:
             raise ValueError(
-                f"fault op(s) {bad} do not apply to the "
-                f"{'sim' if self.is_sim else 'engine'} backend")
+                f"fault op(s) {bad} do not apply to the {kind} backend")
         if self.is_sim:
             clock = self.cluster.clock
             for a in self.actions:
                 clock.call_at(a.at, lambda a=a: self._apply_sim(a))
             clock.call_in(self.reap_interval_s, self._reap_tick)
         else:
+            apply = self._apply_cluster if self.is_cluster \
+                else self._apply_engine
             for a in self.actions:
-                t = threading.Timer(
-                    max(a.at, 0.0), lambda a=a: self._apply_engine(a))
+                t = threading.Timer(max(a.at, 0.0), lambda a=a: apply(a))
                 t.daemon = True
                 self._timers.append(t)
                 t.start()
@@ -156,6 +172,14 @@ class FaultInjector:
         self.backend.crash_worker(a.worker)
         self.injected.append((self.backend.now(), "crash-worker",
                               a.worker, "armed"))
+
+    def _apply_cluster(self, a: FaultAction) -> None:
+        if not self._armed:
+            return      # timer fired in the disarm race window
+        killed = self.launcher.kill(a.worker)
+        self.injected.append((self.backend.now(), "kill-worker-process",
+                              a.worker,
+                              "SIGKILL" if killed else "already dead"))
 
     # ------------------------------------------------------------------
     def summary(self) -> Dict[str, int]:

@@ -83,6 +83,14 @@ class RuntimeDef:
     # ... and keep idle instances alive this long before evicting
     # (None = the platform default keep-alive)
     keep_alive_s: Optional[float] = None
+    # importable factory reference ("pkg.module:callable") + its kwargs.
+    # Callables cannot cross a process boundary, so the cluster backend
+    # registers runtimes by spec: every process (master bookkeeping,
+    # each worker) imports the factory and constructs its own local
+    # RuntimeDef.  ``repro.cluster.runtimes.load_runtime_spec`` is the
+    # loader; factories built there stamp these fields automatically.
+    spec: Optional[str] = None
+    spec_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def supports(self, acc_type: str) -> bool:
         """True when accelerator type ``acc_type`` can serve this runtime."""

@@ -115,6 +115,28 @@ class ObjectStore:
             fn()
         return present
 
+    def put_serialized(self, key: str, blob: bytes,
+                       raw: bool = False) -> str:
+        """Install an *already-serialized* blob under ``key`` and fire its
+        settlement watchers — the transport seam: a remote store (the
+        cluster master, or a client mirror applying a settle record)
+        moves blobs without a decode/re-encode round trip.  ``raw=True``
+        marks the payload as client bytes (``get`` returns them as-is);
+        otherwise the blob must be a pickle and ``get`` unpickles it."""
+        self._blobs[key] = blob
+        if raw:
+            self._raw.add(key)
+        else:
+            self._raw.discard(key)
+        self.n_puts += 1
+        self._notify(key)
+        return key
+
+    def is_raw(self, key: str) -> bool:
+        """True when ``key``'s payload was stored as client bytes (the
+        flag a transport must carry next to the blob)."""
+        return key in self._raw
+
     def get(self, key: str) -> Any:
         self.n_gets += 1
         blob = self._blobs[key]

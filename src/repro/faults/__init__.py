@@ -1,8 +1,9 @@
 """Fault injection — the public surface of the reliability subsystem's
 kill/stall/crash schedule layer (implementation in
 :mod:`repro.core.faults`; see ``docs/reliability.md``)."""
-from repro.core.faults import (ALL_OPS, ENGINE_OPS, SIM_OPS, FaultAction,
-                               FaultInjector, inject, parse_fault_spec)
+from repro.core.faults import (ALL_OPS, CLUSTER_OPS, ENGINE_OPS, SIM_OPS,
+                               FaultAction, FaultInjector, inject,
+                               parse_fault_spec)
 
-__all__ = ["ALL_OPS", "ENGINE_OPS", "SIM_OPS", "FaultAction",
+__all__ = ["ALL_OPS", "CLUSTER_OPS", "ENGINE_OPS", "SIM_OPS", "FaultAction",
            "FaultInjector", "inject", "parse_fault_spec"]

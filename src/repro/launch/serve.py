@@ -6,6 +6,10 @@ discrete-event clock — real reduced-config execution inside the sim, or
 roofline-calibrated service times with ``--sim`` (full-size configs, no
 hardware needed).  ``--backend engine`` bypasses the cluster and executes
 on this host's JAX devices directly (the gateway's engine backend).
+``--cluster N`` spawns a real multi-process deployment instead — a
+master process owner in this process plus N worker *processes* connected
+over the cluster RPC protocol (``docs/cluster.md``); runtimes are
+registered by importable spec so the workers can rebuild them.
 ``--workflow N`` submits N three-step *chained* workflows instead of flat
 events (each step's prompts are the previous step's generations, resolved
 through the object store — the composition layer demo).
@@ -24,6 +28,7 @@ record).
         --pods 2 --events 6
     PYTHONPATH=src python -m repro.launch.serve --backend engine \
         --workflow 2 --max-batch 4
+    PYTHONPATH=src python -m repro.launch.serve --cluster 2 --events 6
     PYTHONPATH=src python -m repro.launch.serve --backend engine \
         --min-warm 1 --slo-ms 2000 --tenant-quota free=2:4 \
         --metrics-out metrics.prom
@@ -61,6 +66,10 @@ def main(argv=None):
     ap.add_argument("--backend", default="sim", choices=["sim", "engine"],
                     help="sim = pod cluster on the event clock; "
                          "engine = direct execution on this host")
+    ap.add_argument("--cluster", type=int, default=None, metavar="N",
+                    help="spawn a real master/worker deployment with N "
+                         "worker processes (overrides --backend; "
+                         "docs/cluster.md)")
     ap.add_argument("--sim", action="store_true",
                     help="simulate full-size configs with roofline-derived "
                          "service times instead of real reduced execution "
@@ -98,9 +107,20 @@ def main(argv=None):
                          "actions (or @path to a file holding one), e.g. "
                          '\'[{"at": 2.0, "op": "kill-node", "node": '
                          '"pod0"}]\'; sim ops: kill-node/stall-node, '
-                         "engine ops: crash-worker (docs/reliability.md)")
+                         "engine ops: crash-worker, cluster ops: "
+                         "kill-worker-process (docs/reliability.md)")
     args = ap.parse_args(argv)
-    if args.backend == "engine":
+    mode = "cluster" if args.cluster is not None else args.backend
+    if mode == "cluster":
+        if args.cluster < 1:
+            ap.error("--cluster needs at least 1 worker process")
+        if args.sim or args.pods is not None or args.scheduler is not None:
+            ap.error("--sim/--pods/--scheduler only apply to --backend sim "
+                     "(--cluster runs real worker processes)")
+        if args.batch_wait_ms is not None:
+            ap.error("--batch-wait-ms only applies to --backend engine "
+                     "(cluster workers batch at the master's queue)")
+    elif mode == "engine":
         if args.sim:
             ap.error("--sim requires --backend sim (the engine backend "
                      "executes real code)")
@@ -115,8 +135,18 @@ def main(argv=None):
     scheduler = args.scheduler if args.scheduler is not None else "warm"
     max_batch = args.max_batch if args.max_batch is not None else 8
 
-    acc_type = "v5e-4x4" if args.backend == "sim" else "host-jax"
-    if args.backend == "sim":
+    acc_type = "v5e-4x4" if mode == "sim" else "host-jax"
+    handle = None
+    if mode == "cluster":
+        from repro.cluster import start_cluster
+        # serve runtimes jit-compile on their cold start: generous lease
+        # and heartbeat bounds so compilation never reads as death
+        handle = start_cluster(args.cluster, lease_s=300.0,
+                               heartbeat_timeout_s=30.0,
+                               max_batch=max_batch,
+                               ready_timeout_s=60.0)
+        gw = Gateway(handle.backend)
+    elif mode == "sim":
         slice_spec = AcceleratorSpec(type=acc_type, slots=1,
                                      mem_bytes=16 << 30, cost_per_hour=19.2,
                                      chips=16)
@@ -138,7 +168,15 @@ def main(argv=None):
 
     rt_ids = []
     for arch in args.arch.split(","):
-        if args.sim:
+        if mode == "cluster":
+            # cluster runtimes travel as importable factory specs, never
+            # as closures — each worker process rebuilds its own copy
+            from repro.cluster import load_runtime_spec
+            rdef = load_runtime_spec(
+                "repro.cluster.runtimes:serve_runtime",
+                {"arch": arch, "max_batch": max_batch,
+                 "max_slots": 4, "max_len": 64})
+        elif args.sim:
             cfg = get_config(arch)
             prof = roofline_profile(cfg, batch=len(prompts),
                                     new_tokens=args.max_new_tokens)
@@ -170,11 +208,11 @@ def main(argv=None):
             burst = float(burst_part) if burst_part else 2.0 * rate
             quotas[name] = (rate, burst)
         plane = ControlPlane(ControlPlaneConfig(
-            tick_interval_s=0.5 if args.backend == "engine" else 5.0,
+            tick_interval_s=5.0 if mode == "sim" else 0.5,
             # the sim's pre-provisioned pods are the capacity floor (they
-            # are not drainable); the engine floors at one worker
+            # are not drainable); engine/cluster floor at one worker
             slo=(SLOPolicy(slo_rlat_p99_s=args.slo_ms / 1e3,
-                           min_units=pods if args.backend == "sim" else 1)
+                           min_units=pods if mode == "sim" else 1)
                  if args.slo_ms is not None else None),
             warm=(WarmPolicy(min_warm={rid: args.min_warm
                                        for rid in rt_ids})
@@ -228,10 +266,23 @@ def main(argv=None):
         print(f"  ev{inv.inv_id} rt={inv.runtime_id:28s} "
               f"acc={inv.accelerator} cold={int(inv.cold_start)} "
               f"ELat={inv.elat:.3f}s RLat={inv.rlat:.3f}s")
-    if args.backend == "sim":
+    if mode == "sim":
         for node in gw.backend.cluster.nodes:
             print(f"{node.name}: cold={node.n_cold_starts} "
                   f"warm={node.n_warm_starts}")
+    elif mode == "cluster":
+        st = gw.backend.stats()
+        for name, rep in sorted(st.get("workers", {}).items()):
+            ws = rep.get("stats") or {}
+            print(f"{name}: pid={ws.get('pid')} "
+                  f"batches={ws.get('n_batches', 0)} "
+                  f"cold={ws.get('n_cold_starts', 0)} "
+                  f"warm={ws.get('n_warm_starts', 0)} "
+                  f"settled={ws.get('n_settled', 0)}")
+        print(f"master: settled={st.get('settled')} "
+              f"requeued={st.get('requeued')} "
+              f"workers_lost={st.get('workers_lost')} "
+              f"duplicate_settles={st.get('duplicate_settles')}")
     else:
         eb = gw.backend
         sizes = eb.batch_sizes or [0]
@@ -254,6 +305,8 @@ def main(argv=None):
             else:
                 f.write(m.prometheus_text())
         print(f"wrote {args.metrics_out}")
+    if handle is not None:
+        handle.close()      # shutdown master, reap worker processes
     if args.workflow:
         # a retried-then-recovered step leaves its failed attempt in the
         # metrics; the demo's verdict is whether the workflows completed
