@@ -1,40 +1,165 @@
-"""Serving-engine microbenchmark: real continuous-batching throughput of a
-reduced model on this host (prefill/decode step latency, tokens/s) — the
-measured analogue of the runtime-instance ELat that the cluster simulation
-consumes."""
+"""Serving-engine benchmark: paged KV cache vs the dense per-slot layout
+at EQUAL KV budget, on a mixed long/short-prompt workload.
+
+The comparison holds the cache budget (tokens of KV the host may keep
+resident) fixed and lets each layout spend it its own way:
+
+* **dense** reserves ``max_len`` positions per slot, so the budget buys
+  ``budget // max_len`` concurrent requests regardless of their lengths;
+* **paged** allocates pages against *actual* sequence lengths, so the
+  same budget serves roughly ``budget // avg_footprint`` concurrent
+  requests — the vLLM observation that reservation waste, not capacity,
+  bounds batch size.
+
+Reported per engine: decode tokens/s, mean TTFT split by prompt class
+(long prompts admit immediately under paging + chunked prefill instead
+of queueing for a dense slot), decode-step rate, and the achieved
+fraction of the analytic memory-bound step rate from
+``roofline/analytic.py`` (HBM bytes per decode step at the engine's
+concurrency over this host's assumed stream bandwidth).  The headline
+gates (``baseline.json``) are ``speedup/decode_tokens_per_s >= 1.5``
+and ``speedup/ttft_long >= 1``.
+"""
 from __future__ import annotations
 
 import time
-from typing import Dict
+from typing import Dict, List
 
 import jax
 
 from repro.configs import get_config
+from repro.configs.base import InputShape
 from repro.models import model as M
+from repro.roofline.analytic import memory_model
 from repro.serve.engine import Request, ServingEngine
+from repro.serve.paging import pages_for
+
+# practical single-socket host stream bandwidth (bytes/s) for the
+# roofline fraction — an assumption, reported alongside the fraction
+HOST_BW_BYTES_S = 20e9
+
+# the service's advertised context limit: dense must RESERVE this many
+# KV positions per slot; paged only allocates pages actually touched
+MAX_LEN = 128
+PAGE = 16
+LONG_LEN, SHORT_LEN = 40, 5
 
 
-def bench(arch: str = "granite-3-2b", n_requests: int = 8,
-          max_new: int = 8) -> Dict[str, float]:
-    cfg = get_config(arch).reduced()
-    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, max_slots=4, max_len=64)
-    # warm up compile
-    eng.generate([Request(prompt=[1, 2, 3], max_new_tokens=2, req_id=-1)])
-    reqs = [Request(prompt=[1, 2, 3, 4], max_new_tokens=max_new, req_id=i)
-            for i in range(n_requests)]
+def _workload(n_long: int, n_short: int, max_new_long: int,
+              max_new_short: int) -> List[Request]:
+    """Shorts first, longs behind them — the long prompts arrive while
+    decode slots are already busy, which is exactly the admission
+    scenario paging + chunked prefill is supposed to win."""
+    reqs = []
+    for i in range(n_short + n_long):
+        short = i < n_short
+        length = SHORT_LEN if short else LONG_LEN
+        prompt = [(7 * i + j) % 500 + 1 for j in range(length)]
+        reqs.append(Request(prompt=prompt, req_id=i,
+                            max_new_tokens=max_new_short if short
+                            else max_new_long))
+    return reqs
+
+
+def _serve(eng: ServingEngine, reqs: List[Request]) -> Dict[str, float]:
+    eng.n_decode_steps = eng.n_evictions = 0      # drop warmup counts
+    eng.n_prefill_chunks = eng.n_prefills = 0
     t0 = time.perf_counter()
     done = eng.generate(reqs)
     wall = time.perf_counter() - t0
     n_tokens = sum(len(r.output) for r in done)
+    ttft = {True: [], False: []}
+    for r in done:
+        ttft[len(r.prompt) >= LONG_LEN].append(r.t_first - r.t_submit)
+    return {
+        "wall_s": wall,
+        "decode_tokens_per_s": n_tokens / wall,
+        "decode_steps": float(eng.n_decode_steps),
+        "steps_per_s": eng.n_decode_steps / wall,
+        "ttft_long_s": sum(ttft[True]) / max(len(ttft[True]), 1),
+        "ttft_short_s": sum(ttft[False]) / max(len(ttft[False]), 1),
+        "evictions": float(eng.n_evictions),
+        "prefill_chunks": float(eng.n_prefill_chunks),
+    }
+
+
+def bench(arch: str = "granite-3-2b", budget_tokens: int = 512,
+          n_long: int = 12, n_short: int = 28,
+          max_new_long: int = 8,
+          max_new_short: int = 11) -> Dict[str, float]:
+    cfg = get_config(arch).reduced()
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0))
+
+    dense_slots = max(budget_tokens // MAX_LEN, 1)
+    # paged spends the same budget on actual footprints (prompt + budget,
+    # page-rounded): the mixed workload's mean footprint sets concurrency
+    avg_fp = (pages_for(LONG_LEN + max_new_long, PAGE) * PAGE * n_long
+              + pages_for(SHORT_LEN + max_new_short, PAGE) * PAGE * n_short
+              ) / (n_long + n_short)
+    paged_slots = max(int(budget_tokens / avg_fp), 1)
+
+    dense = ServingEngine(cfg, params, max_slots=dense_slots,
+                          max_len=MAX_LEN, page_size=0)
+    paged = ServingEngine(cfg, params, max_slots=paged_slots,
+                          max_len=MAX_LEN, page_size=PAGE,
+                          kv_pool_tokens=budget_tokens,
+                          prefill_chunk=2 * PAGE)
+    # compile every shape bucket off the clock: both prompt lengths,
+    # every block-table width the run can reach, mixed decode batches
+    for eng in (dense, paged):
+        warm = [Request(prompt=[9] * n, max_new_tokens=2, req_id=-1 - k)
+                for k, n in enumerate((SHORT_LEN, 2 * PAGE, LONG_LEN))]
+        eng.generate(warm)
+        eng.generate([Request(prompt=[9] * SHORT_LEN, max_new_tokens=2,
+                              req_id=-9)])    # 1-page width bucket
+        eng.generate([Request(prompt=[9] * 20, max_new_tokens=2,
+                              req_id=-10)])   # 2-page width bucket
+
+    # best-of-2 passes per engine: sub-second walls are sensitive to OS
+    # scheduling jitter; fresh Request objects each pass (outputs append)
+    def best(eng) -> Dict[str, float]:
+        runs = [_serve(eng, _workload(n_long, n_short,
+                                      max_new_long, max_new_short))
+                for _ in range(2)]
+        return min(runs, key=lambda r: r["wall_s"])
+
+    r_dense = best(dense)
+    r_paged = best(paged)
+
+    # analytic memory bound for one decode step at each concurrency:
+    # fraction = achieved step rate / (BW / bytes-per-step)
+    def frac(seq_len: int, slots: int, steps_per_s: float) -> float:
+        shape = InputShape("serve_decode", seq_len, slots, "decode")
+        step_bytes = memory_model(cfg, shape, data=1, model=1,
+                                  weight_bytes=4, cache_bytes=4)
+        return steps_per_s / (HOST_BW_BYTES_S / step_bytes)
+
+    # dense streams its full reservation; paged only the mapped pages
+    r_dense["roofline_fraction"] = frac(MAX_LEN, dense_slots,
+                                        r_dense["steps_per_s"])
+    r_paged["roofline_fraction"] = frac(int(avg_fp), paged_slots,
+                                        r_paged["steps_per_s"])
+
     return {
         "arch": arch,
-        "requests": float(n_requests),
-        "wall_s": wall,
-        "tokens_per_s": n_tokens / wall,
-        "decode_steps": float(eng.n_decode_steps),
-        "prefills": float(eng.n_prefills),
-        "us_per_decode_step": wall / max(eng.n_decode_steps, 1) * 1e6,
+        "budget_tokens": float(budget_tokens),
+        "dense_slots": float(dense_slots),
+        "paged_slots": float(paged_slots),
+        "host_bw_bytes_s": HOST_BW_BYTES_S,
+        "dense": r_dense,
+        "paged": r_paged,
+        "speedup": {
+            "decode_tokens_per_s": (r_paged["decode_tokens_per_s"]
+                                    / r_dense["decode_tokens_per_s"]),
+            "ttft_long": r_dense["ttft_long_s"] / max(
+                r_paged["ttft_long_s"], 1e-9),
+            "ttft_short": r_dense["ttft_short_s"] / max(
+                r_paged["ttft_short_s"], 1e-9),
+        },
+        # legacy serving row fields (benchmarks/run.py CSV line)
+        "tokens_per_s": r_paged["decode_tokens_per_s"],
+        "us_per_decode_step": (r_paged["wall_s"]
+                               / max(r_paged["decode_steps"], 1) * 1e6),
     }
 
 

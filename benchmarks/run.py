@@ -194,13 +194,21 @@ def _sec_faults() -> Dict[str, Any]:
 
 
 def _sec_serving() -> Dict[str, Any]:
-    # --- serving engine (real JAX execution) ----------------------------
+    # --- serving engine: paged KV vs dense at equal budget (real JAX) ---
     from benchmarks.bench_serving import bench as serving_bench
     t0 = time.perf_counter()
     v = serving_bench()
     _ = (time.perf_counter() - t0) * 1e6
     _row("serving_engine_reduced", v["us_per_decode_step"],
          f"tokens_per_s={v['tokens_per_s']:.1f}")
+    s = v["speedup"]
+    _row("serving_paged_vs_dense", v["paged"]["wall_s"] * 1e6,
+         f"paged={v['paged']['decode_tokens_per_s']:.0f}tok/s "
+         f"dense={v['dense']['decode_tokens_per_s']:.0f}tok/s "
+         f"speedup={s['decode_tokens_per_s']:.2f}x "
+         f"ttft_long={s['ttft_long']:.2f}x "
+         f"ttft_short={s['ttft_short']:.2f}x "
+         f"roofline_frac={v['paged']['roofline_fraction']:.3f}")
     return v
 
 

@@ -89,11 +89,17 @@ def add_runtime(runtime_id: str = "add", add: int = 1,
 
 
 def serve_runtime(arch: str = "granite-3-2b", max_batch: int = 4,
-                  max_slots: int = 4, max_len: int = 64) -> RuntimeDef:
+                  max_slots: int = 4, max_len: int = 64,
+                  page_size: int = 16,
+                  prefill_chunk: int = 0) -> RuntimeDef:
     """A real generation runtime over a reduced config (jit + sampling
-    inside the worker process; heavy imports deferred to load time)."""
+    inside the worker process; heavy imports deferred to load time).
+    ``page_size``/``prefill_chunk`` select the worker engines' KV cache
+    layout (0 = the dense per-slot reference) — they travel in the spec
+    kwargs, so every worker process serves off the same layout."""
     from repro.configs import get_config
     from repro.serve.api import make_serve_runtime
     cfg = get_config(arch).reduced()
     return make_serve_runtime(cfg, max_slots=max_slots, max_len=max_len,
-                              max_batch=max_batch)
+                              max_batch=max_batch, page_size=page_size,
+                              prefill_chunk=prefill_chunk)

@@ -191,8 +191,10 @@ class Worker:
         results: List[Any] = [None] * len(batch)
         if err is None:
             try:
-                results = run_batch(rdef, datas,
-                                    dict(batch[0].config, handle=handle))
+                results = run_batch(
+                    rdef, datas,
+                    dict(batch[0].config, handle=handle,
+                         attempts=[inv.attempt for inv in batch]))
             except Exception as e:  # noqa: BLE001 — unsuccessful events
                 err = repr(e)
         e_end = self.now()

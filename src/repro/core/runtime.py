@@ -131,18 +131,30 @@ def run_batch(rdef: RuntimeDef, datas: Sequence[Any],
     Pads to the runtime's bucket size, calls ``batch_fn`` once (or falls
     back to per-event ``fn`` calls when the runtime is not batchable), and
     returns exactly ``len(datas)`` results.
+
+    ``config["attempts"]`` (one at-least-once delivery attempt number per
+    event, set by the dispatcher) is padded alongside the datas for
+    ``batch_fn``; the ``fn`` fallback receives its own event's number as
+    ``config["attempt"]``.  Runtimes fold it into any sampling randomness
+    so a redelivered event does not replay a previous attempt's draws.
     """
     datas = list(datas)
     n = len(datas)
+    attempts = list(config.get("attempts") or [])[:n]
+    attempts += [0] * (n - len(attempts))
     if rdef.batch_fn is not None and (n > 1 or rdef.fn is None):
-        padded = datas + [datas[-1]] * (rdef.bucket_size(n) - n)
-        results = list(rdef.batch_fn(padded, dict(config, n_real=n)))
+        pad = rdef.bucket_size(n) - n
+        padded = datas + [datas[-1]] * pad
+        results = list(rdef.batch_fn(
+            padded, dict(config, n_real=n,
+                         attempts=attempts + [attempts[-1]] * pad)))
         if len(results) < n:
             raise RuntimeError(
                 f"batch_fn for {rdef.runtime_id!r} returned {len(results)} "
                 f"results for a batch of {n}")
         return results[:n]
-    return [rdef.fn(data, dict(config)) for data in datas]
+    return [rdef.fn(data, dict(config, attempt=a))
+            for data, a in zip(datas, attempts)]
 
 
 class RuntimeRegistry:

@@ -836,7 +836,9 @@ class EngineBackend(Backend):
             try:
                 with self._on_device(widx):
                     results = run_batch(
-                        rdef, datas, dict(batch[0].config, handle=handle))
+                        rdef, datas,
+                        dict(batch[0].config, handle=handle,
+                             attempts=[inv.attempt for inv in batch]))
             except Exception as e:  # noqa: BLE001 — unsuccessful events
                 err = repr(e)
         e_end = e_start + (self.now() - t0)     # measured wall ELat

@@ -165,6 +165,83 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def gather_pages(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Gather a paged KV pool into per-sequence contiguous caches.
+
+    pool: (num_pages, page, KV, hd); block_tables: (B, P) physical page ids
+    (0 = the reserved scratch page for unmapped logical pages).
+    Returns (B, P*page, KV, hd) — logical position p of sequence b lives at
+    row p of its gather, so a plain ``kv_len`` mask recovers validity.
+    """
+    B, P = block_tables.shape
+    _, page, KV, hd = pool.shape
+    return pool[block_tables].reshape(B, P * page, KV, hd)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           kv_len: jax.Array, *,
+                           softmax_scale: Optional[float] = None
+                           ) -> jax.Array:
+    """Single-step GQA attention through block tables.
+
+    Semantically ``decode_attention`` over the gathered pages: the mapped
+    prefix [0, kv_len) of each sequence's gather is its KV history in
+    order, everything past it (partial last page + scratch-page rows) is
+    masked by ``kv_len``.
+    """
+    return decode_attention(q, gather_pages(k_pool, block_tables),
+                            gather_pages(v_pool, block_tables),
+                            kv_len, softmax_scale=softmax_scale)
+
+
+def chunk_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            kv_len: jax.Array, q_offset: jax.Array, *,
+                            softmax_scale: Optional[float] = None
+                            ) -> jax.Array:
+    """Causal attention for a prefill *chunk* with explicit positions.
+
+    Unlike :func:`flash_attention` (which assumes the queries are the last
+    Sq positions of the kv array), the chunk's queries sit at positions
+    ``q_offset + [0, C)`` inside a cache of ``kv_len`` valid positions —
+    the chunk's own K/V were already scattered into the cache, so
+    ``kv_len = q_offset + C`` and the causal mask handles intra-chunk
+    ordering.  q: (B, C, H, hd); k, v: (B, S, KV, hd); kv_len, q_offset:
+    (B,).  Normalization follows the flash path (p @ v then divide) so a
+    one-chunk prefill reproduces full-prefill arithmetic.
+    """
+    B, C, H, hd = q.shape
+    _, S, KV, _ = k.shape
+    G = H // KV
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    qr = q.reshape(B, C, KV, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr, k.astype(jnp.float32))
+    qpos = q_offset[:, None] + jnp.arange(C)[None, :]       # (B, C)
+    kpos = jnp.arange(S)[None, :]                           # (1, S)
+    mask = (kpos[:, None] <= qpos[..., None]) & \
+        (kpos < kv_len[:, None])[:, None]                   # (B, C, S)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.maximum(p.sum(axis=-1), 1e-30)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    out = out / l[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, C, H, hd).astype(q.dtype)
+
+
+def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_tables: jax.Array,
+                            kv_len: jax.Array, q_offset: jax.Array, *,
+                            softmax_scale: Optional[float] = None
+                            ) -> jax.Array:
+    """Chunked-prefill attention through block tables (chunk K/V already
+    scattered into the pool pages before the call)."""
+    return chunk_prefill_attention(
+        q, gather_pages(k_pool, block_tables),
+        gather_pages(v_pool, block_tables),
+        kv_len, q_offset, softmax_scale=softmax_scale)
+
+
 def moe_gmm(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
     """Grouped (expert) matmul oracle: rows of ``x`` are sorted by expert.
 

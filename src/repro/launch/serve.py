@@ -102,6 +102,18 @@ def main(argv=None):
                     help="after the run, dump the metrics collector to "
                          "PATH — JSON for .json paths, Prometheus text "
                          "otherwise")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV cache page size in tokens for real engines "
+                         "(0 = dense per-slot cache, the paged engine's "
+                         "differential reference; docs/architecture.md)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="prefill prompts longer than this in chunk-sized "
+                         "pieces interleaved with decode steps (0 = whole-"
+                         "prompt prefill; needs --page-size > 0)")
+    ap.add_argument("--tuned", action="store_true",
+                    help="re-exec once with the host tuning preset "
+                         "(tcmalloc LD_PRELOAD, quiet XLA logging, host "
+                         "device count; launch/tuning.py) before JAX init")
     ap.add_argument("--fault-spec", default=None, metavar="JSON|@FILE",
                     help="arm a fault-injection schedule: a JSON list of "
                          "actions (or @path to a file holding one), e.g. "
@@ -110,6 +122,16 @@ def main(argv=None):
                          "engine ops: crash-worker, cluster ops: "
                          "kill-worker-process (docs/reliability.md)")
     args = ap.parse_args(argv)
+    if args.tuned and argv is None:
+        # LD_PRELOAD/XLA_FLAGS only bind at process start: apply the
+        # preset by re-exec (no-op inside the already-tuned child).
+        # Skipped for programmatic calls (argv given) — tests must not
+        # exec away the interpreter.
+        from repro.launch.tuning import maybe_reexec
+        maybe_reexec("repro.launch.serve")
+    if args.prefill_chunk and not args.page_size:
+        ap.error("--prefill-chunk needs --page-size > 0 (chunked prefill "
+                 "scatters into the paged KV pool)")
     mode = "cluster" if args.cluster is not None else args.backend
     if mode == "cluster":
         if args.cluster < 1:
@@ -175,7 +197,9 @@ def main(argv=None):
             rdef = load_runtime_spec(
                 "repro.cluster.runtimes:serve_runtime",
                 {"arch": arch, "max_batch": max_batch,
-                 "max_slots": 4, "max_len": 64})
+                 "max_slots": 4, "max_len": 64,
+                 "page_size": args.page_size,
+                 "prefill_chunk": args.prefill_chunk})
         elif args.sim:
             cfg = get_config(arch)
             prof = roofline_profile(cfg, batch=len(prompts),
@@ -191,7 +215,9 @@ def main(argv=None):
             # dispatcher silently clamps to make_serve_runtime's default
             rdef = make_serve_runtime(cfg, acc_types=acc_types,
                                       max_slots=4, max_len=64,
-                                      max_batch=max_batch)
+                                      max_batch=max_batch,
+                                      page_size=args.page_size,
+                                      prefill_chunk=args.prefill_chunk)
         rt_ids.append(gw.register(rdef))
 
     plane = None

@@ -137,12 +137,17 @@ def attn_block(cfg: ModelConfig, kind: BlockKind, params, x: jax.Array, *,
                pos: Optional[jax.Array] = None,
                causal: bool = True, cross_x: Optional[jax.Array] = None,
                cache_len: Optional[int] = None,
-               impl: Optional[str] = None
+               impl: Optional[str] = None,
+               block_tables: Optional[jax.Array] = None
                ) -> Tuple[jax.Array, Optional[Cache], jax.Array]:
     """Returns (x, new_cache, aux_loss).
 
     ``cache_len``: total decode-cache capacity to allocate at prefill time
     (≥ prompt length; defaults to the prompt length).
+    ``block_tables``: (B, P) physical page ids — present iff this block's
+    K/V cache is a paged pool (num_pages, page, KV, hd) instead of the
+    dense per-slot (B, L, KV, hd); only global attention pages (ring
+    caches are already O(window) per slot).
     """
     B, S, d = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -180,27 +185,67 @@ def attn_block(cfg: ModelConfig, kind: BlockKind, params, x: jax.Array, *,
                 new_cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
             else:
                 new_cache = {"k": k, "v": v}
+    elif mode == "chunk":
+        # one prefill chunk: queries at positions pos + [0,S), K/V
+        # scattered into this sequence's paged pool pages
+        assert cache is not None and pos is not None
+        assert block_tables is not None and not (window or chunk), \
+            "chunked prefill requires paged global attention"
+        tokpos = pos + jnp.arange(S)                        # (S,)
+        q, k, v = _qkv(cfg, params, h)
+        q = rope(q, tokpos[None, :], cfg.rope_theta)
+        k = rope(k, tokpos[None, :], cfg.rope_theta)
+        page = cache["k"].shape[1]
+        phys = jnp.take_along_axis(
+            block_tables, jnp.broadcast_to((tokpos // page)[None], (B, S)),
+            axis=1)                                         # (B, S)
+        off = jnp.broadcast_to((tokpos % page)[None], (B, S))
+        k_pool = cache["k"].at[phys, off].set(k.astype(cache["k"].dtype))
+        v_pool = cache["v"].at[phys, off].set(v.astype(cache["v"].dtype))
+        kv_len = jnp.full((B,), pos + S, jnp.int32)
+        q_off = jnp.full((B,), pos, jnp.int32)
+        attn = ops.paged_prefill_attention(q, k_pool, v_pool, block_tables,
+                                           kv_len, q_off, impl=impl)
+        new_cache = {"k": k_pool, "v": v_pool}
     else:  # decode
         assert cache is not None and pos is not None
         q, k_new, v_new = _qkv(cfg, params, h)  # S == 1
         q = rope(q, pos[:, None], cfg.rope_theta)
         k_new = rope(k_new, pos[:, None], cfg.rope_theta)
-        L = cache["k"].shape[1]
-        slot = pos % L
-        bidx = jnp.arange(B)
-        # astype: int8-quantized caches store narrowed K/V (§Perf)
-        k_cache = cache["k"].at[bidx, slot].set(
-            k_new[:, 0].astype(cache["k"].dtype))
-        v_cache = cache["v"].at[bidx, slot].set(
-            v_new[:, 0].astype(cache["v"].dtype))
-        if window:
-            kv_len = jnp.minimum(pos + 1, L)
-        elif chunk:
-            kv_len = pos % L + 1
+        if block_tables is not None and not (window or chunk):
+            # paged: this token's K/V lands at (page[pos // page], pos %
+            # page) of the shared pool; attention gathers back through the
+            # table. Inactive engine rows carry an all-zeros table (the
+            # reserved scratch page), so their writes are harmless.
+            page = cache["k"].shape[1]
+            phys = jnp.take_along_axis(block_tables,
+                                       (pos // page)[:, None], axis=1)[:, 0]
+            off = pos % page
+            k_cache = cache["k"].at[phys, off].set(
+                k_new[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[phys, off].set(
+                v_new[:, 0].astype(cache["v"].dtype))
+            attn = ops.paged_decode_attention(q, k_cache, v_cache,
+                                              block_tables, pos + 1,
+                                              impl=impl)
+            new_cache = {"k": k_cache, "v": v_cache}
         else:
-            kv_len = jnp.minimum(pos + 1, L)
-        attn = ops.decode_attention(q, k_cache, v_cache, kv_len, )
-        new_cache = {"k": k_cache, "v": v_cache}
+            L = cache["k"].shape[1]
+            slot = pos % L
+            bidx = jnp.arange(B)
+            # astype: int8-quantized caches store narrowed K/V (§Perf)
+            k_cache = cache["k"].at[bidx, slot].set(
+                k_new[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[bidx, slot].set(
+                v_new[:, 0].astype(cache["v"].dtype))
+            if window:
+                kv_len = jnp.minimum(pos + 1, L)
+            elif chunk:
+                kv_len = pos % L + 1
+            else:
+                kv_len = jnp.minimum(pos + 1, L)
+            attn = ops.decode_attention(q, k_cache, v_cache, kv_len, )
+            new_cache = {"k": k_cache, "v": v_cache}
 
     x = x + jnp.einsum("bsh,hd->bsd", attn.reshape(B, S, H * hd), params["wo"])
 
@@ -411,6 +456,17 @@ def rglru_block(cfg: ModelConfig, params, x: jax.Array, *, mode: str,
             new_cache = {"h": hseq[:, -1].astype(jnp.float32),
                          "conv": xb[:, -3:].astype(xb.dtype) if S >= 3 else
                          jnp.pad(xb, ((0, 0), (3 - S, 0), (0, 0)))}
+    elif mode == "chunk":
+        # prefill chunk: the width-4 conv continues from the cached
+        # 3-sample history and the recurrence from the cached state
+        assert cache is not None
+        xp = jnp.concatenate([cache["conv"].astype(xb.dtype), xb], axis=1)
+        y = sum(xp[:, i:i + S] * params["conv_w"][i] for i in range(4))
+        y = y + params["conv_b"]
+        a, bterm = _rglru_gates(params, y)
+        hseq = ops.rglru_scan(a, bterm, cache["h"], impl=impl)
+        new_cache = {"h": hseq[:, -1].astype(jnp.float32),
+                     "conv": xp[:, -3:].astype(xb.dtype)}
     else:
         assert cache is not None
         conv_hist = cache["conv"]                            # (B,3,D)
@@ -568,6 +624,13 @@ def mlstm_block(cfg: ModelConfig, params, x: jax.Array, *, mode: str,
                           jnp.exp(-m1))
         hseq = (num / den[..., None])[:, None]            # (B,1,nh,hd)
         new_cache = {"C": C1, "n": n1, "m": m1}
+    elif mode == "chunk":
+        # prefill chunk: the chunked-parallel scan continues from cache
+        assert cache is not None
+        hseq, state = _mlstm_chunk_scan(qf, kf, vf, ig, fg,
+                                        (cache["C"], cache["n"],
+                                         cache["m"]), chunk)
+        new_cache = {"C": state[0], "n": state[1], "m": state[2]}
     elif noattn:
         # cost-probe stub: the chunkwise quadratic + state recurrence are
         # modeled analytically (roofline/analytic.py); keep the projections.
@@ -660,8 +723,12 @@ def slstm_block(cfg: ModelConfig, params, x: jax.Array, *, mode: str,
         new_cache = {"c": carry[0], "n": carry[1], "h": carry[2],
                      "m": carry[3]}
     else:
-        zeros = jnp.zeros((B, nh, hd), jnp.float32)
-        carry0 = (zeros, zeros, zeros, zeros)
+        if mode == "chunk":  # prefill chunk: continue from cached carry
+            assert cache is not None
+            carry0 = (cache["c"], cache["n"], cache["h"], cache["m"])
+        else:
+            zeros = jnp.zeros((B, nh, hd), jnp.float32)
+            carry0 = (zeros, zeros, zeros, zeros)
 
         def step(carry, p):
             new = _slstm_step(params, carry, p)
@@ -670,7 +737,8 @@ def slstm_block(cfg: ModelConfig, params, x: jax.Array, *, mode: str,
         carry, hs = jax.lax.scan(step, carry0, pre.swapaxes(0, 1))
         hseq = hs.swapaxes(0, 1)                           # (B,S,nh,hd)
         new_cache = ({"c": carry[0], "n": carry[1], "h": carry[2],
-                      "m": carry[3]} if mode == "prefill" else {})
+                      "m": carry[3]} if mode in ("prefill", "chunk")
+                     else {})
 
     x = x + jnp.einsum("bsd,de->bse",
                        hseq.reshape(B, -1, d).astype(x.dtype), params["w_out"])

@@ -132,14 +132,94 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
 
 
 # ----------------------------------------------------------------------
+# Paged KV cache (serving): global-attention K/V live in a shared pool of
+# (num_pages, page_size) token pages indexed through per-sequence block
+# tables; every other cache leaf (ring caches for local/chunked attention,
+# recurrent state, cross-attention K/V) stays per-slot — those are already
+# O(1) or O(window) per sequence, so paging buys them nothing.
+# ----------------------------------------------------------------------
+def paged_cache_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                      num_pages: int, page_size: int,
+                      kv_dtype: Optional[str] = None) -> Dict[str, Any]:
+    """Like :func:`cache_specs`, with global-attention k/v replaced by
+    pooled page arrays. Layers stacked in one period share the pool SHAPE
+    but each owns its pages (leading ``n_periods`` axis), addressed by the
+    same block table."""
+    n_periods, rem = _layout(cfg)
+    cross = cfg.is_encdec
+    KV, hd = cfg.n_kv_heads, cfg.hd
+
+    def bcs(kind):
+        s = dict(_block_cache_specs(cfg, kind, batch, seq_len, cross))
+        if kind == BlockKind.ATTN:
+            pool = Spec((num_pages, page_size, KV, hd),
+                        (None, None, "kv", None), init="zeros")
+            s["k"], s["v"] = pool, pool
+        if kv_dtype:
+            s = {k: (dataclasses.replace(v, dtype=kv_dtype)
+                     if k in ("k", "v") else v) for k, v in s.items()}
+        return s
+
+    specs: Dict[str, Any] = {}
+    if n_periods:
+        specs["blocks"] = {
+            f"p{i}": _stack(bcs(kind), n_periods)
+            for i, kind in enumerate(cfg.pattern)}
+    if rem:
+        specs["rem"] = {
+            f"r{j}": bcs(cfg.pattern[j % len(cfg.pattern)])
+            for j in range(rem)}
+    return specs
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                     num_pages: int, page_size: int):
+    zero_key = jax.random.PRNGKey(0)  # all-zeros init; key unused
+    return init_params(paged_cache_specs(cfg, batch, seq_len,
+                                         num_pages, page_size),
+                       zero_key, cfg.dtype)
+
+
+def paged_leaf_flags(cfg: ModelConfig, cache) -> list:
+    """Per-leaf booleans (tree_flatten_with_path order): True for pooled
+    global-attention k/v leaves, False for per-slot leaves.  The engine
+    zips these against flattened caches to scatter/slice correctly."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(cache)
+
+    def is_paged(path) -> bool:
+        keys = [getattr(p, "key", None) for p in path]
+        if keys[-1] not in ("k", "v"):
+            return False
+        if "blocks" in keys:
+            kind = cfg.pattern[int(keys[keys.index("blocks") + 1][1:])]
+        elif "rem" in keys:
+            j = int(keys[keys.index("rem") + 1][1:])
+            kind = cfg.pattern[j % len(cfg.pattern)]
+        else:
+            return False
+        return kind == BlockKind.ATTN
+
+    return [is_paged(path) for path, _ in flat]
+
+
+def chunked_prefill_supported(cfg: ModelConfig) -> bool:
+    """Chunked prefill covers every block kind with O(1) carried state:
+    global attention (paged pool + explicit-position attention) and the
+    recurrent kinds (state continuation).  Ring caches (local/chunked
+    attention) and encoder-decoder cross-attention prefill whole."""
+    ok = {BlockKind.ATTN, BlockKind.RGLRU, BlockKind.MLSTM, BlockKind.SLSTM}
+    return not cfg.is_encdec and all(k in ok for k in cfg.pattern)
+
+
+# ----------------------------------------------------------------------
 # Block dispatch
 # ----------------------------------------------------------------------
 def _apply_block(cfg, kind: BlockKind, params, x, *, mode, cache, pos,
-                 cross_x, cache_len, impl):
+                 cross_x, cache_len, impl, block_tables=None):
     if kind in (BlockKind.ATTN, BlockKind.LOCAL_ATTN, BlockKind.CHUNKED_ATTN):
         return B.attn_block(cfg, kind, params, x, mode=mode, cache=cache,
                             pos=pos, cross_x=cross_x, cache_len=cache_len,
-                            impl=impl)
+                            impl=impl, block_tables=block_tables)
     if kind == BlockKind.RGLRU:
         return B.rglru_block(cfg, params, x, mode=mode, cache=cache, impl=impl)
     if kind == BlockKind.MLSTM:
@@ -178,11 +258,18 @@ def forward(cfg: ModelConfig, params, batch: Dict[str, jax.Array], *,
             mode: str = "train", cache=None, pos: Optional[jax.Array] = None,
             cache_len: Optional[int] = None, impl: Optional[str] = None,
             remat: bool = False, unroll: bool = False,
-            remat_policy: Optional[str] = None):
+            remat_policy: Optional[str] = None,
+            block_tables: Optional[jax.Array] = None):
     """Returns (logits, new_cache_or_None, aux_loss).
 
     ``batch``: tokens (B,S) [+ labels, + frames (audio), + patches (vlm)];
     decode mode: tokens (B,1) + pos (B,).
+    ``chunk`` mode: one prefill chunk of an in-flight prompt — tokens
+    (B,C) at positions ``pos + [0,C)`` (``pos`` scalar), consuming AND
+    returning a full decode cache (recurrent state continues, attention
+    K/V scatter into the paged pool).
+    ``block_tables``: (B, P) physical page ids for paged global-attention
+    caches (decode/chunk modes); None = dense per-slot caches.
     ``unroll``: Python loop over layer periods instead of lax.scan (used by
     the dry-run cost probes, where while-loop bodies are counted once).
     """
@@ -207,6 +294,10 @@ def forward(cfg: ModelConfig, params, batch: Dict[str, jax.Array], *,
         n_patches = patches.shape[1]
     cross_x = None
     if cfg.is_encdec and mode != "decode":
+        if mode == "chunk":
+            raise NotImplementedError(
+                "chunked prefill: encoder-decoder prefills whole "
+                "(see chunked_prefill_supported)")
         # decode reads cross K/V from the cache; no encoder recompute
         cross_x = _encode(cfg, params, batch["frames"].astype(x.dtype), impl,
                           unroll=unroll)
@@ -224,7 +315,7 @@ def forward(cfg: ModelConfig, params, batch: Dict[str, jax.Array], *,
             x, nc, a = _apply_block(cfg, kind, p_params[f"p{i}"], x,
                                     mode=mode, cache=c, pos=pos,
                                     cross_x=cross_x, cache_len=cache_len,
-                                    impl=impl)
+                                    impl=impl, block_tables=block_tables)
             if nc is not None:
                 new_caches[f"p{i}"] = nc
             aux = aux + a
@@ -264,7 +355,8 @@ def forward(cfg: ModelConfig, params, batch: Dict[str, jax.Array], *,
         c = cache["rem"][f"r{j}"] if cache is not None else None
         x, nc, a = _apply_block(cfg, kind, params["rem"][f"r{j}"], x,
                                 mode=mode, cache=c, pos=pos, cross_x=cross_x,
-                                cache_len=cache_len, impl=impl)
+                                cache_len=cache_len, impl=impl,
+                                block_tables=block_tables)
         if nc is not None and mode != "train":
             new_cache.setdefault("rem", {})[f"r{j}"] = nc
         aux = aux + a
@@ -272,7 +364,7 @@ def forward(cfg: ModelConfig, params, batch: Dict[str, jax.Array], *,
     x = rms_norm(x, params["final_ln"])
     if n_patches:
         x = x[:, n_patches:]
-    if mode == "prefill":
+    if mode in ("prefill", "chunk"):
         # serving only needs the next-token distribution — unembed the last
         # position only (32k-position logits would dominate prefill cost)
         x = x[:, -1:]
@@ -290,12 +382,35 @@ def prefill(cfg: ModelConfig, params, batch, *, cache_len=None, impl=None,
 
 
 def decode_step(cfg: ModelConfig, params, cache, tokens: jax.Array,
-                pos: jax.Array, *, impl=None, unroll=False):
-    """One token per sequence against the cache. Returns (logits, cache)."""
+                pos: jax.Array, *, impl=None, unroll=False,
+                block_tables: Optional[jax.Array] = None):
+    """One token per sequence against the cache. Returns (logits, cache).
+
+    ``block_tables``: (B, P) page ids when the cache's global-attention
+    K/V leaves are paged pools (serving engine); None for dense caches.
+    """
     logits, new_cache, _ = forward(cfg, params, {"tokens": tokens},
                                    mode="decode", cache=cache, pos=pos,
-                                   impl=impl, unroll=unroll)
+                                   impl=impl, unroll=unroll,
+                                   block_tables=block_tables)
     return logits, new_cache
+
+
+def prefill_chunk(cfg: ModelConfig, params, cache, tokens: jax.Array,
+                  pos: jax.Array, block_tables: Optional[jax.Array], *,
+                  impl=None):
+    """Advance an in-flight prompt by one chunk.
+
+    tokens: (B, C) chunk at positions ``pos + [0, C)`` (``pos`` scalar,
+    0 for the first chunk); ``cache`` carries recurrent state and the
+    paged attention pool between chunks.  Returns (last-position logits,
+    updated cache) — the logits only mean "next token" once the final
+    chunk has run.
+    """
+    logits, new_cache, _ = forward(cfg, params, {"tokens": tokens},
+                                   mode="chunk", cache=cache, pos=pos,
+                                   impl=impl, block_tables=block_tables)
+    return logits[:, -1:], new_cache
 
 
 def loss_fn(cfg: ModelConfig, params, batch, *, impl=None, remat=False,

@@ -26,6 +26,9 @@ def make_serve_runtime(cfg: ModelConfig, *,
                        acc_types: Optional[Dict[str, SimProfile]] = None,
                        max_slots: int = 4, max_len: int = 128,
                        max_batch: int = 4,
+                       page_size: int = 16, prefill_chunk: int = 0,
+                       kv_pool_tokens: Optional[int] = None,
+                       greedy: bool = True,
                        seed: int = 0) -> RuntimeDef:
     """RuntimeDef for serving ``cfg`` with REAL execution on this host.
 
@@ -34,6 +37,12 @@ def make_serve_runtime(cfg: ModelConfig, *,
     Defaults to the gateway engine backend's ``host-jax`` type.
     max_batch: largest event micro-batch one engine call may serve
     (their requests share the engine's decode slots).
+    page_size: KV pool page size in tokens; 0 serves off the dense
+    per-slot cache (the paged engine's differential reference).
+    prefill_chunk: when > 0 (and the architecture supports it), prompts
+    longer than this prefill in chunk-sized pieces interleaved with
+    decode steps instead of stalling the whole batch.
+    kv_pool_tokens: shared KV pool capacity (default max_slots*max_len).
     """
     if acc_types is None:
         acc_types = {HOST_ACC: SimProfile(elat_median_s=0.4, cold_start_s=2.0)}
@@ -41,7 +50,10 @@ def make_serve_runtime(cfg: ModelConfig, *,
     def setup():
         params = M.init_model_params(cfg, jax.random.PRNGKey(seed))
         return ServingEngine(cfg, params, max_slots=max_slots,
-                             max_len=max_len)
+                             max_len=max_len, page_size=page_size,
+                             prefill_chunk=prefill_chunk,
+                             kv_pool_tokens=kv_pool_tokens, greedy=greedy,
+                             sample_seed=seed)
 
     def _prompts(data: Any) -> List[List[int]]:
         # {"prompts": [...]} is the client form; {"outputs": [...]} is a
@@ -54,9 +66,14 @@ def make_serve_runtime(cfg: ModelConfig, *,
             return [p for d in data for p in _prompts(d)]
         return data["prompts"] if "prompts" in data else data["outputs"]
 
-    def _requests(data: Any, max_new: int, base_id: int) -> List[Request]:
+    def _requests(data: Any, max_new: int, base_id: int,
+                  attempt: int = 0) -> List[Request]:
+        # the delivery attempt folds into each request's sampling key, so
+        # an at-least-once redelivery draws fresh randomness instead of
+        # replaying the lost attempt's stream
         prompts = [list(p) or [0] for p in _prompts(data)]
-        return [Request(prompt=p, max_new_tokens=max_new, req_id=base_id + i)
+        return [Request(prompt=p, max_new_tokens=max_new,
+                        req_id=base_id + i, attempt=attempt)
                 for i, p in enumerate(prompts)]
 
     def fn(data: Any, config: Dict[str, Any]):
@@ -64,7 +81,9 @@ def make_serve_runtime(cfg: ModelConfig, *,
         if engine is None:                      # node skipped setup (sim)
             engine = setup()
         max_new = int(config.get("max_new_tokens", 8))
-        done = engine.generate(_requests(data, max_new, base_id=0))
+        done = engine.generate(_requests(
+            data, max_new, base_id=0,
+            attempt=int(config.get("attempt", 0))))
         return {"outputs": [r.output for r in done],
                 "n_decode_steps": engine.n_decode_steps}
 
@@ -73,9 +92,11 @@ def make_serve_runtime(cfg: ModelConfig, *,
         if engine is None:
             engine = setup()
         max_new = int(config.get("max_new_tokens", 8))
+        attempts = list(config.get("attempts") or [])
+        attempts += [0] * (len(datas) - len(attempts))
         groups, base = [], 0
-        for data in datas:
-            reqs = _requests(data, max_new, base_id=base)
+        for data, attempt in zip(datas, attempts):
+            reqs = _requests(data, max_new, base_id=base, attempt=attempt)
             base += len(reqs)
             groups.append(reqs)
         done_groups = engine.generate_many(groups)
