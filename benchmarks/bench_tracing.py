@@ -1,0 +1,126 @@
+"""Tracing overhead + span completeness (the PR-9 observability gates).
+
+Overhead: the same sleep-bound load pushed through the EngineBackend
+twice — tracer disabled, then enabled with the full span tree + metrics
+feed.  Each arm is the min wall-clock of ``REPEATS`` interleaved runs
+(min-of-N strips scheduler noise; the load is sleep-bound so the tracing
+cost is isolated, not hidden under jit time).  The gate is the paper
+posture that observability must be affordable: enabled/disabled wall
+ratio <= 1.05 (``overhead_ok`` is a 0/1 verdict so the baseline entry is
+exact, not a noisy wall-clock number).
+
+Completeness: after the enabled arm, every settled invocation must own a
+*closed* root span (``span_complete`` 0/1) — the "no invocation escapes
+the trace" contract docs/observability.md promises.
+
+A deterministic sim arm is reported for information (virtual clock, so
+the wall time IS the tracer cost), but not gated.
+
+    PYTHONPATH=src python benchmarks/bench_tracing.py
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Any, Dict
+
+from repro import obs
+from repro.core.runtime import RuntimeDef
+from repro.gateway import EngineBackend, Gateway
+
+N_EVENTS = 96
+SLEEP_S = 0.02
+MAX_BATCH = 8
+N_WORKERS = 2
+REPEATS = 3
+OVERHEAD_CEILING = 1.05
+
+
+def sleep_runtime(rid: str = "trace-sleep") -> RuntimeDef:
+    return RuntimeDef(
+        runtime_id=rid, profiles={},
+        fn=lambda data, config: time.sleep(SLEEP_S) or {"ok": True})
+
+
+def _one_engine_run(traced: bool) -> Dict[str, Any]:
+    obs.reset()
+    eb = EngineBackend(n_workers=N_WORKERS, max_batch=MAX_BATCH,
+                       batch_wait_s=0.002)
+    gw = Gateway(eb)
+    gw.register(sleep_runtime())
+    if traced:
+        obs.enable(clock=eb.now, metrics=gw.metrics)
+    t0 = time.monotonic()
+    futs = gw.map("trace-sleep", [{"i": i} for i in range(N_EVENTS)])
+    for f in futs:
+        f.result()
+    wall = time.monotonic() - t0
+    settled = sum(1 for f in futs if f.invocation.r_end is not None)
+    closed = obs.TRACER.closed_roots()
+    eb.shutdown()
+    obs.reset()
+    return {"wall_s": wall, "settled": settled, "closed_roots": closed}
+
+
+def _sim_run(traced: bool) -> float:
+    from repro.core.accelerator import AcceleratorSpec
+    from repro.core.cluster import Cluster
+    from repro.core.runtime import SimProfile
+    from repro.gateway import SimBackend
+    obs.reset()
+    cl = Cluster(scheduler="warm", seed=0)
+    cl.add_node("n0", [AcceleratorSpec(type="gpu-k600", slots=2,
+                                       mem_bytes=1 << 30,
+                                       cost_per_hour=0.5)])
+    gw = Gateway(SimBackend(cl))
+    gw.register(RuntimeDef(
+        runtime_id="r",
+        profiles={"gpu-k600": SimProfile(elat_median_s=0.2,
+                                         cold_start_s=0.5)}))
+    if traced:
+        obs.enable(clock=gw.backend.now)
+    t0 = time.monotonic()
+    gw.map("r", [{"i": i} for i in range(400)], at=0.0, spacing_s=0.05)
+    gw.drain()
+    wall = time.monotonic() - t0
+    obs.reset()
+    return wall
+
+
+def bench() -> Dict[str, Any]:
+    # interleave the arms so drift hits both equally; min-of-N per arm
+    off, on = [], []
+    last_on = None
+    for _ in range(REPEATS):
+        off.append(_one_engine_run(traced=False))
+        last_on = _one_engine_run(traced=True)
+        on.append(last_on)
+    t_off = min(r["wall_s"] for r in off)
+    t_on = min(r["wall_s"] for r in on)
+    ratio = t_on / max(t_off, 1e-9)
+    complete = (last_on["settled"] == N_EVENTS
+                and last_on["closed_roots"] == N_EVENTS)
+    sim_off = min(_sim_run(False) for _ in range(REPEATS))
+    sim_on = min(_sim_run(True) for _ in range(REPEATS))
+    return {
+        "engine/overhead": {
+            "wall_off_s": round(t_off, 4),
+            "wall_on_s": round(t_on, 4),
+            "enabled_over_disabled": round(ratio, 4),
+            "overhead_ok": 1.0 if ratio <= OVERHEAD_CEILING else 0.0,
+        },
+        "engine/completeness": {
+            "settled": last_on["settled"],
+            "closed_roots": last_on["closed_roots"],
+            "span_complete": 1.0 if complete else 0.0,
+        },
+        "sim/overhead": {        # informational: virtual-clock tracer cost
+            "wall_off_s": round(sim_off, 4),
+            "wall_on_s": round(sim_on, 4),
+            "enabled_over_disabled": round(sim_on / max(sim_off, 1e-9), 4),
+        },
+    }
+
+
+if __name__ == "__main__":
+    print(json.dumps(bench(), indent=2))

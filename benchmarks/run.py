@@ -268,6 +268,27 @@ def _sec_cluster() -> Dict[str, Any]:
     return c
 
 
+def _sec_tracing() -> Dict[str, Any]:
+    # --- observability cost + span completeness (docs/observability.md)
+    from benchmarks.bench_tracing import bench as tracing_bench
+    t0 = time.perf_counter()
+    tr = tracing_bench()
+    us = (time.perf_counter() - t0) * 1e6 / 2
+    o = tr["engine/overhead"]
+    _row("tracing_engine_overhead", us,
+         f"on={o['wall_on_s']:.3f}s off={o['wall_off_s']:.3f}s "
+         f"ratio={o['enabled_over_disabled']:.3f} "
+         f"ok={int(o['overhead_ok'])} (ceiling 1.05)")
+    c = tr["engine/completeness"]
+    _row("tracing_span_completeness", us,
+         f"settled={c['settled']} closed_roots={c['closed_roots']} "
+         f"complete={int(c['span_complete'])}")
+    s = tr["sim/overhead"]
+    _row("tracing_sim_overhead", us,
+         f"ratio={s['enabled_over_disabled']:.3f} (informational)")
+    return tr
+
+
 SECTIONS: List[Tuple[str, Callable[[], Dict[str, Any]]]] = [
     ("scaling", _sec_scaling),
     ("elat", _sec_elat),
@@ -282,6 +303,7 @@ SECTIONS: List[Tuple[str, Callable[[], Dict[str, Any]]]] = [
     ("serving", _sec_serving),
     ("roofline", _sec_roofline),
     ("scale", _sec_scale),
+    ("tracing", _sec_tracing),
 ]
 
 

@@ -46,6 +46,7 @@ from repro.cluster.rpc import decode_blob, inv_to_wire
 from repro.cluster.runtimes import load_runtime_spec
 from repro.cluster.transport import (InProcTransport, MasterTransport,
                                      RpcTransport)
+from repro.obs import TRACER
 
 # Invocation fields the pump copies from a settlement record, in order;
 # r_end is applied LAST (after the outcome blob lands and watchers fire)
@@ -205,6 +206,8 @@ class ClusterBackend(Backend):
                 self.metrics.record(inv)
                 self.n_rejected += 1
                 self._settled_cond.notify_all()
+        if TRACER.enabled:
+            TRACER.record_invocation(inv)
 
     # -- the completion pump ---------------------------------------------
     def _pump_loop(self) -> None:
@@ -231,7 +234,13 @@ class ClusterBackend(Backend):
         """Install one settlement: fields, then the outcome blob (firing
         future watchers), then ``r_end`` — the same persist-before-settle
         order the thread-mode backends use."""
-        wire = rec.get("inv") or {}
+        wire = rec.get("inv")
+        if wire is None:
+            # spans-only stream record (the keeper's abandoned-attempt
+            # closures) — trace relay, no settlement to apply
+            if TRACER.enabled:
+                TRACER.ingest(rec.get("spans") or [])
+            return
         inv_id = wire.get("inv_id")
         with self._lock:
             inv = self._inflight.pop(inv_id, None)
@@ -246,6 +255,13 @@ class ClusterBackend(Backend):
             inv.r_end = wire.get("r_end")
             self._n_settled += 1
             self.metrics.record(inv)
+            if TRACER.enabled:
+                # adopt the worker-authored spans that rode the record,
+                # then emit the partition — minus the children another
+                # process already owns
+                TRACER.ingest(rec.get("spans") or [])
+                TRACER.record_invocation(inv, emit_cold=False,
+                                         emit_execute=False)
             self._settled_cond.notify_all()
 
     # -- completion waits (engine-style condition loops) -----------------

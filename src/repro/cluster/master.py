@@ -57,6 +57,11 @@ from repro.core.storage import ObjectStore, make_outcome
 from repro.cluster.keeper import HeartbeatKeeper
 from repro.cluster.rpc import (RPC_VERSION, RpcServer, decode_blob,
                                encode_blob, inv_from_wire, inv_to_wire)
+from repro.obs.tracer import Tracer
+
+# span-record authoring only (never enabled): the master relays trace
+# records through the settle log; the gateway client's tracer owns them
+_SPAN_RELAY = Tracer()
 
 # settlement-stream retention: records past this are trimmed from the
 # front (the single gateway pump keeps up long before this fills)
@@ -81,6 +86,10 @@ class Master:
             retry_limit_fn=lambda inv:
                 self.registry.get(inv.runtime_id).max_attempts,
             fail_fn=self._settle_exhausted_locked)
+        # a dead worker's leased events requeue with their dead attempt's
+        # timestamps still intact — close that attempt's orphaned span as
+        # ``abandoned`` and relay it home through the settlement stream
+        self.queue.set_requeue_observer(self._observe_requeue_locked)
         self.keeper = HeartbeatKeeper(timeout_s=heartbeat_timeout_s)
         self.keeper_interval_s = max(float(keeper_interval_s), 0.01)
 
@@ -304,41 +313,73 @@ class Master:
         inv.accelerator = f.get("accelerator")
         inv.cold_start = bool(f.get("cold_start"))
         inv.prewarmed = bool(f.get("prewarmed"))
-        # monotone §V-A clamps: a worker's clock offset may disagree by a
-        # hair; the chain the metrics assert must still hold
+        # monotone §V-A clamps: a worker's hello-learned clock offset may
+        # lag the master's by the handshake RTT; clamp e_start up to the
+        # take stamp but preserve the worker-MEASURED duration (ELat must
+        # not be squeezed by a clock disagreement), and shift the worker-
+        # authored trace spans by the same delta so the assembled span
+        # partition stays exact
         base = inv.n_start if inv.n_start is not None \
             else (inv.r_start or 0.0)
         e_start = f.get("e_start")
         e_end = f.get("e_end")
         inv.e_start = max(base, e_start) if e_start is not None else base
-        inv.e_end = max(inv.e_start, e_end) if e_end is not None \
-            else inv.e_start
+        inv.e_end = inv.e_start + max(e_end - e_start, 0.0) \
+            if e_start is not None and e_end is not None else inv.e_start
+        spans = rec.get("spans")
+        if spans and e_start is not None and inv.e_start > e_start:
+            delta = inv.e_start - e_start
+            for sp in spans:
+                if sp.get("t_start") is not None:
+                    sp["t_start"] = max(sp["t_start"] + delta, base)
+                if sp.get("t_end") is not None:
+                    sp["t_end"] = sp["t_end"] + delta
         inv.n_end = max(inv.e_end, now)
         inv.r_end = inv.n_end
         inv.success = bool(f.get("success"))
         inv.error = f.get("error")
         blob = decode_blob(rec["blob"])
-        self._record_settlement_locked(inv, blob)
+        self._record_settlement_locked(inv, blob, spans=rec.get("spans"))
         counts = self._worker_counts.setdefault(
             worker, {"n_batches": 0, "n_settled": 0})
         counts["n_settled"] += 1
         return {"inv_id": inv_id, "accepted": True}
 
-    def _record_settlement_locked(self, inv: Invocation,
-                                  blob: bytes) -> None:
-        """Persist the outcome, fold metrics, append the stream record."""
+    def _record_settlement_locked(self, inv: Invocation, blob: bytes,
+                                  spans: Optional[List[Dict[str, Any]]]
+                                  = None) -> None:
+        """Persist the outcome, fold metrics, append the stream record
+        (``spans``: worker-authored trace records riding home with it)."""
         inv.result_ref = self.store.put_serialized(
             f"result:inv{inv.inv_id}", blob)
         self.metrics.record(inv)
         self._inflight.pop(inv.inv_id, None)
         self._settled_ids.add(inv.inv_id)
         self.n_settled += 1
-        self._settle_log.append({"inv": inv_to_wire(inv),
-                                 "blob": encode_blob(blob)})
+        entry = {"inv": inv_to_wire(inv), "blob": encode_blob(blob)}
+        if spans:
+            entry["spans"] = spans
+        self._settle_log.append(entry)
+        self._trim_log_locked()
+
+    def _trim_log_locked(self) -> None:
         overflow = len(self._settle_log) - SETTLE_LOG_MAX
         if overflow > 0:
             del self._settle_log[:overflow]
             self._log_base += overflow
+
+    def _observe_requeue_locked(self, inv: Invocation, holder: str,
+                                now: Optional[float], reason: str) -> None:
+        """Queue observer (fires under the master lock, inside the keeper
+        tick or reap that lost the delivery): author the dead attempt's
+        ``abandoned`` span record and stream it to the gateway client as
+        a spans-only settlement record."""
+        rec = _SPAN_RELAY.record_abandoned(
+            inv, holder=holder,
+            now=now if now is not None else self.now(), reason=reason)
+        if rec is not None:
+            self._settle_log.append({"spans": [rec]})
+            self._trim_log_locked()
 
     def _settle_exhausted_locked(self, inv: Invocation, msg: str) -> None:
         """The queue's ``fail_fn``: settle an out-of-attempts event as a

@@ -41,6 +41,7 @@ from repro.core.storage import make_outcome, unwrap_outcome
 from repro.cluster.rpc import (RpcClient, decode_blob, encode_blob,
                                inv_from_wire)
 from repro.cluster.runtimes import load_runtime_spec
+from repro.obs import TRACER
 
 DATA_CACHE_MAX = 64
 
@@ -184,17 +185,27 @@ class Worker:
     def _execute_batch(self, batch: List[Invocation]) -> None:
         rdef = self.registry.get(batch[0].runtime_id)
         key = batch[0].runtime_key
+        # lazy tracing: the first batch carrying trace context turns this
+        # process's tracer on — master clock (offset learned at hello),
+        # span ids namespaced by worker name — with zero config plumbing
+        # and zero overhead while the client never traces
+        traced = any(inv.trace_id is not None for inv in batch)
+        if traced and not TRACER.enabled:
+            TRACER.enable(clock=self.now, prefix=f"{self.name}:")
+        t_acq = self.now()
         handle, cold, prewarmed, err = self._acquire_handle(rdef, key)
+        cold_end = self.now()
         datas = [unwrap_outcome(self._fetch(inv.data_ref))
                  for inv in batch]
         e_start = self.now()
         results: List[Any] = [None] * len(batch)
         if err is None:
             try:
-                results = run_batch(
-                    rdef, datas,
-                    dict(batch[0].config, handle=handle,
-                         attempts=[inv.attempt for inv in batch]))
+                with self._trace_ctx(batch if traced else []):
+                    results = run_batch(
+                        rdef, datas,
+                        dict(batch[0].config, handle=handle,
+                             attempts=[inv.attempt for inv in batch]))
             except Exception as e:  # noqa: BLE001 — unsuccessful events
                 err = repr(e)
         e_end = self.now()
@@ -214,6 +225,31 @@ class Worker:
                            "cold_start": cold, "prewarmed": prewarmed,
                            "node": self.name, "accelerator": acc},
             })
+        if traced and TRACER.enabled:
+            # this process authors the spans only it can time — the warm-
+            # pool acquisition (cold start) and the batch execution — with
+            # the deterministic ids the client-side partition expects, so
+            # the assembled tree is contiguous across process boundaries
+            for inv in batch:
+                if inv.trace_id is None:
+                    continue
+                root = inv.span_id or f"inv{inv.inv_id}"
+                pre = f"{root}/a{inv.attempt}"
+                if cold and cold_end > t_acq:
+                    TRACER.complete(
+                        "cold_start", t_acq, cold_end, trace=inv.trace_id,
+                        span_id=f"{pre}/cold_start",
+                        parent=f"{pre}/dispatch",
+                        attrs={"runtime": inv.runtime_id,
+                               "node": self.name})
+                TRACER.complete(
+                    "execute", e_start, e_end, trace=inv.trace_id,
+                    span_id=f"{pre}/execute", parent=root,
+                    status="ok" if err is None else "error",
+                    attrs={"runtime": inv.runtime_id, "node": self.name,
+                           "accelerator": acc, "pid": os.getpid()})
+            # ship every closed span home inside the settle RPC
+            records[0]["spans"] = TRACER.drain_records()
         try:
             rsp = self._main.request("settle", worker=self.name,
                                      records=records)
@@ -230,6 +266,17 @@ class Worker:
         # nudge the heartbeat so the master's stats reflect this batch
         # immediately, not one beat interval later
         self._beat_now.set()
+
+    def _trace_ctx(self, batch: List[Invocation]):
+        """Thread-local trace context for ``run_batch``: serving-engine
+        spans emitted during execution nest under the lead invocation's
+        ``execute`` span."""
+        import contextlib
+        lead = next((i for i in batch if i.trace_id is not None), None)
+        if lead is None or not TRACER.enabled:
+            return contextlib.nullcontext()
+        root = lead.span_id or f"inv{lead.inv_id}"
+        return TRACER.ctx(lead.trace_id, f"{root}/a{lead.attempt}/execute")
 
     # -- heartbeats / directives -----------------------------------------
     def _stats(self) -> Dict[str, Any]:

@@ -40,6 +40,7 @@ from repro.controlplane.telemetry import (TelemetryBus, TelemetryConfig,
 from repro.controlplane.warmpool import WarmPolicy, WarmPoolManager
 from repro.core.events import Invocation
 from repro.gateway.backends import Backend, SimCapacityHooks
+from repro.obs import TRACER
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,9 +103,19 @@ class ControlPlane:
         admitted or shed — feeds the telemetry windows."""
         with self._lock:
             self.telemetry.observe_arrival(inv, now)
-            if self.admission is None:
-                return None
-            return self.admission.admit(inv, now, self.hooks)
+            reason = None if self.admission is None else \
+                self.admission.admit(inv, now, self.hooks)
+        if TRACER.enabled and inv.trace_id is not None:
+            # zero-width instant: the admission decision, same span on
+            # every backend (the plane is the shared admission tap)
+            root = inv.span_id or f"inv{inv.inv_id}"
+            TRACER.instant(
+                "admission", now, trace=inv.trace_id, parent=root,
+                span_id=f"{root}/a{inv.attempt}/admission",
+                status="rejected" if reason is not None else "ok",
+                attrs={"runtime": inv.runtime_id, "tenant": inv.tenant,
+                       **({"reason": reason} if reason else {})})
+        return reason
 
     # -- driving ---------------------------------------------------------
     def start(self) -> None:

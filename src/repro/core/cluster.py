@@ -20,6 +20,7 @@ from repro.core.scheduler import make_scheduler
 from repro.core.simclock import SimClock
 from repro.core.storage import ObjectStore
 from repro.core.workload import PhaseWorkload
+from repro.obs import TRACER
 
 # ----------------------------------------------------------------------
 # Paper-calibrated constants (Hardless §V.B)
@@ -63,6 +64,17 @@ class Cluster:
             lambda inv: (self.registry.get(inv.runtime_id).max_attempts
                          if inv.runtime_id in self.registry else 1),
             self._fail_lost)
+        # close a lost attempt's orphaned span as abandoned (virtual-time
+        # stamps — the observer fires before the retry wipes them)
+        self.queue.set_requeue_observer(self._observe_requeue)
+
+    def _observe_requeue(self, inv: Invocation, holder: str,
+                         now: Optional[float], reason: str) -> None:
+        if TRACER.enabled:
+            TRACER.record_abandoned(
+                inv, holder=holder,
+                now=now if now is not None else self.clock.now(),
+                reason=reason)
 
     # -- topology -------------------------------------------------------
     def add_node(self, name: str, specs: Sequence[AcceleratorSpec]
@@ -112,6 +124,8 @@ class Cluster:
         inv.error = reason
         self.store.persist_outcome(inv, None, reason)
         self.metrics.record(inv)
+        if TRACER.enabled:
+            TRACER.record_invocation(inv)
 
     def _shed(self, inv: Invocation, reason: str) -> None:
         """Settle an admission-shed event as rejected (never executed)."""
@@ -122,6 +136,8 @@ class Cluster:
         inv.error = f"rejected: {reason}"
         self.store.persist_outcome(inv, None, inv.error)
         self.metrics.record(inv)
+        if TRACER.enabled:
+            TRACER.record_invocation(inv)
 
     def run_workloads(self, workloads: Sequence[PhaseWorkload],
                       extra_time_s: float = 600.0) -> MetricsCollector:

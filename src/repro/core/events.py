@@ -74,6 +74,13 @@ class Invocation:
     workflow: Optional[str] = None      # owning Workflow's name
     step: Optional[str] = None          # step name inside that workflow
 
+    # --- trace context (None = untraced; see repro.obs) ---
+    # stamped by the gateway when tracing is enabled; rides the cluster
+    # RPC frames verbatim so workers/master parent their spans correctly;
+    # NOT part of runtime_key (observability must not split warm pools)
+    trace_id: Optional[str] = None      # owning trace (wf:<name> / inv:<id>)
+    span_id: Optional[str] = None       # this invocation's root span id
+
     # ------------------------------------------------------------------
     @property
     def runtime_key(self) -> str:

@@ -31,6 +31,15 @@ from repro.core.quantiles import QuantileSketch
 RFAST_WINDOW_S = 10.0
 
 
+def escape_label_value(value: str) -> str:
+    """Escape a Prometheus exposition-format label value: backslash,
+    double-quote, and newline must be escaped or the scrape misparses
+    (https://prometheus.io/docs/instrumenting/exposition_formats/)."""
+    return str(value).replace("\\", "\\\\") \
+                     .replace('"', '\\"') \
+                     .replace("\n", "\\n")
+
+
 class _StatBucket:
     """Incrementally-maintained counters + latency sketches for one
     aggregation key (overall / one runtime / one tenant)."""
@@ -107,6 +116,9 @@ class MetricsCollector:
         # sim records arrive in virtual-time order so sorting is a no-op)
         self._success_ends: List[float] = []
         self._ends_sorted = True
+        # span-duration summaries fed by the tracer (repro.obs):
+        # (runtime_id, span name) -> [count, total seconds, max seconds]
+        self._span_durations: Dict[Tuple[str, str], List[float]] = {}
 
     def record(self, inv: Invocation) -> None:
         assert inv.check_monotone(), f"non-monotone timestamps: {inv}"
@@ -136,6 +148,31 @@ class MetricsCollector:
             trim = len(self.completed) - self.history_max
             del self.completed[:trim]
             self._dropped += trim
+
+    def observe_span(self, runtime_id: str, span: str,
+                     duration_s: float) -> None:
+        """Fold one closed trace span into the per-runtime duration
+        summaries (called by an enabled :class:`repro.obs.Tracer`)."""
+        row = self._span_durations.get((runtime_id, span))
+        if row is None:
+            self._span_durations[(runtime_id, span)] = \
+                [1, duration_s, duration_s]
+        else:
+            row[0] += 1
+            row[1] += duration_s
+            if duration_s > row[2]:
+                row[2] = duration_s
+
+    def span_durations(self) -> Dict[str, Dict[str, Dict[str, float]]]:
+        """``{runtime: {span: {count, total_s, mean_s, max_s}}}`` — where
+        each runtime's invocations spend their time, by trace span."""
+        out: Dict[str, Dict[str, Dict[str, float]]] = {}
+        for (rid, span), (n, total, mx) in sorted(
+                self._span_durations.items()):
+            out.setdefault(rid, {})[span] = {
+                "count": n, "total_s": total,
+                "mean_s": total / n if n else 0.0, "max_s": mx}
+        return out
 
     # ------------------------------------------------------------------
     @property
@@ -265,11 +302,14 @@ class MetricsCollector:
         """The full derived-metrics record as one JSON-serializable dict
         (aggregate summary + per-runtime + per-tenant breakdowns), so
         bench/ops tooling stops re-deriving summaries by hand."""
-        return {
+        out: Dict[str, object] = {
             "summary": self.summary(),
             "per_runtime": self.per_runtime(),
             "per_tenant": self.per_tenant(),
         }
+        if self._span_durations:
+            out["span_durations"] = self.span_durations()
+        return out
 
     def prometheus_text(self, prefix: str = "hardless") -> str:
         """Prometheus text-exposition dump of the summary gauges, with
@@ -293,11 +333,37 @@ class MetricsCollector:
             lines.append(f"# HELP {prefix}_{name} {help_txt}")
             lines.append(f"# TYPE {prefix}_{name} gauge")
             lines.append(f"{prefix}_{name} {s[name]}")
-        for rid, r in self.per_runtime().items():
-            for k in ("r_success", "rlat_p50", "rlat_p99", "cold_starts",
-                      "rejected"):
-                lines.append(f'{prefix}_runtime_{k}{{runtime="{rid}"}} {r[k]}')
-        for tenant, r in self.per_tenant().items():
-            for k in ("r_success", "rejected"):
-                lines.append(f'{prefix}_tenant_{k}{{tenant="{tenant}"}} {r[k]}')
+        runtime_keys = ("r_success", "rlat_p50", "rlat_p99", "cold_starts",
+                        "rejected")
+        per_runtime = self.per_runtime()
+        for k in runtime_keys:
+            if not per_runtime:
+                break
+            lines.append(f"# HELP {prefix}_runtime_{k} per-runtime {k}")
+            lines.append(f"# TYPE {prefix}_runtime_{k} gauge")
+            for rid, r in per_runtime.items():
+                lines.append(f'{prefix}_runtime_{k}'
+                             f'{{runtime="{escape_label_value(rid)}"}} '
+                             f'{r[k]}')
+        per_tenant = self.per_tenant()
+        for k in ("r_success", "rejected"):
+            if not per_tenant:
+                break
+            lines.append(f"# HELP {prefix}_tenant_{k} per-tenant {k}")
+            lines.append(f"# TYPE {prefix}_tenant_{k} gauge")
+            for tenant, r in per_tenant.items():
+                lines.append(f'{prefix}_tenant_{k}'
+                             f'{{tenant="{escape_label_value(tenant)}"}} '
+                             f'{r[k]}')
+        if self._span_durations:
+            for suffix, idx in (("count", 0), ("seconds_total", 1)):
+                lines.append(f"# HELP {prefix}_span_{suffix} trace-span "
+                             f"duration summary per runtime and span")
+                lines.append(f"# TYPE {prefix}_span_{suffix} gauge")
+                for (rid, span), row in sorted(
+                        self._span_durations.items()):
+                    lines.append(
+                        f'{prefix}_span_{suffix}'
+                        f'{{runtime="{escape_label_value(rid)}",'
+                        f'span="{escape_label_value(span)}"}} {row[idx]}')
         return "\n".join(lines) + "\n"

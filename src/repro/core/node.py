@@ -14,6 +14,7 @@ from typing import Dict, List, Optional, Set
 from repro.core.accelerator import Accelerator
 from repro.core.events import Invocation
 from repro.core.queue import ScannableQueue
+from repro.obs import TRACER
 from repro.core.runtime import RuntimeRegistry
 from repro.core.scheduler import Scheduler, WarmAffinityScheduler
 from repro.core.storage import ObjectStore, unwrap_outcome
@@ -144,6 +145,17 @@ class NodeManager:
         fetch = (self.store.transfer_time(inv.data_ref)
                  if inv.data_ref in self.store else self.store.rtt)
         inv.e_start = inv.n_start + cold_start + fetch
+        if TRACER.enabled and inv.trace_id is not None and cold_start > 0.0:
+            # stamped in virtual time at dispatch (the duration is not
+            # recoverable from the settled record), so traces stay
+            # deterministic; parent id is deterministic too (repro.obs)
+            root = inv.span_id or f"inv{inv.inv_id}"
+            TRACER.complete(
+                "cold_start", inv.n_start, inv.n_start + cold_start,
+                trace=inv.trace_id,
+                span_id=f"{root}/a{inv.attempt}/cold_start",
+                parent=f"{root}/a{inv.attempt}/dispatch",
+                attrs={"runtime": inv.runtime_id, "node": self.name})
 
         # pin the delivery this completion belongs to: if the lease is
         # reaped and the event redelivered (possibly back to *this* node),
@@ -217,6 +229,8 @@ class NodeManager:
         acc.n_executions += 1
         acc.release()
         self.metrics.record(inv)
+        if TRACER.enabled:
+            TRACER.record_invocation(inv, emit_cold=False)
         self._schedule_idle_check(acc, inv.runtime_key)
 
         # paper behaviour: immediately look for a SAME-configuration event
@@ -245,6 +259,8 @@ class NodeManager:
         inv.error = reason
         self.store.persist_outcome(inv, None, reason)   # for store pollers
         self.metrics.record(inv)
+        if TRACER.enabled:
+            TRACER.record_invocation(inv, emit_cold=False)
 
     def _schedule_idle_check(self, acc: Accelerator, runtime_key: str,
                              at: Optional[float] = None) -> None:

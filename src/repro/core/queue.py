@@ -94,6 +94,19 @@ class ScannableQueue:
         # an event (per-RuntimeDef), and the permanent-failure settle path
         self._retry_limit_fn: Optional[Callable[[Invocation], int]] = None
         self._fail_fn: Optional[Callable[[Invocation, str], None]] = None
+        # tracing seam: observes every lost delivery BEFORE the dead
+        # attempt's timestamps are wiped, so the orphaned span can be
+        # closed as abandoned with its real dispatch time (repro.obs)
+        self._requeue_observer: Optional[
+            Callable[[Invocation, str, Optional[float], str], None]] = None
+
+    def set_requeue_observer(
+            self, fn: Optional[Callable[[Invocation, str, Optional[float],
+                                         str], None]]) -> None:
+        """Install ``fn(inv, holder, now, reason)``, called once per lost
+        delivery (requeued or exhausted) with the dead attempt's
+        timestamps still intact."""
+        self._requeue_observer = fn
 
     def configure_retries(self, retry_limit_fn: Callable[[Invocation], int],
                           fail_fn: Callable[[Invocation, str], None]) -> None:
@@ -337,6 +350,8 @@ class ScannableQueue:
             inv = lease.inv
             if inv.r_end is not None:
                 continue            # settled late without ack — just drop
+            if self._requeue_observer is not None:
+                self._requeue_observer(inv, lease.holder, now, reason)
             limit = self._retry_limit_fn(inv) if self._retry_limit_fn \
                 else 1
             if inv.attempt + 1 < limit:

@@ -29,6 +29,7 @@ from repro.core.events import Invocation, runtime_key_for
 from repro.core.metrics import MetricsCollector
 from repro.core.runtime import HOST_ACC, RuntimeDef, RuntimeRegistry, run_batch
 from repro.core.storage import ObjectStore, unwrap_outcome
+from repro.obs import TRACER
 
 
 class CapacityHooks:
@@ -563,6 +564,8 @@ class EngineBackend(Backend):
                             f"backpressure")
         self.store.persist_outcome(inv, None, inv.error)
         self.metrics.record(inv)
+        if TRACER.enabled:
+            TRACER.record_invocation(inv)
         self.n_rejected += 1
         self._settled.notify_all()
 
@@ -720,6 +723,11 @@ class EngineBackend(Backend):
         for inv in batch:
             if inv.r_end is not None:
                 continue
+            if TRACER.enabled:
+                # close the dead attempt's span as abandoned while its
+                # timestamps are still intact (reset_for_retry wipes them)
+                TRACER.record_abandoned(inv, holder="engine-worker",
+                                        now=now, reason="worker crashed")
             rdef = self.registry.get(inv.runtime_id)
             if inv.attempt + 1 < rdef.max_attempts:
                 inv.reset_for_retry()
@@ -738,6 +746,8 @@ class EngineBackend(Backend):
                 except Exception:   # noqa: BLE001 — store itself broken
                     pass
                 self.metrics.record(inv)
+                if TRACER.enabled:
+                    TRACER.record_invocation(inv)
         if retries:
             # one batch is always one runtime_key; redeliver at the head
             key = retries[0].runtime_key
@@ -771,6 +781,8 @@ class EngineBackend(Backend):
                 except Exception:   # noqa: BLE001 — store itself broken
                     pass
                 self.metrics.record(inv)
+                if TRACER.enabled:
+                    TRACER.record_invocation(inv)
 
     # -- execution -------------------------------------------------------
     def _evict_over_budget_locked(self) -> None:
@@ -822,7 +834,9 @@ class EngineBackend(Backend):
             inv.node = f"local/w{widx}"
             inv.accelerator = acc
 
+        t_acq = self.now()
         handle, cold, prewarmed, err = self._acquire_handle(rdef, key)
+        cold_s = (self.now() - t_acq) if cold else 0.0  # measured setup()
         for inv in batch:
             inv.cold_start = cold
             inv.prewarmed = prewarmed
@@ -834,7 +848,7 @@ class EngineBackend(Backend):
         results: List[Any] = [None] * len(batch)
         if err is None:
             try:
-                with self._on_device(widx):
+                with self._on_device(widx), self._trace_ctx(batch):
                     results = run_batch(
                         rdef, datas,
                         dict(batch[0].config, handle=handle,
@@ -870,6 +884,21 @@ class EngineBackend(Backend):
                 inv.success = inv_err is None
                 inv.error = inv_err
                 self.metrics.record(inv)
+                if TRACER.enabled:
+                    TRACER.record_invocation(
+                        inv, cold_s=cold_s,
+                        batch_window_s=self.batch_wait_s)
+
+    def _trace_ctx(self, batch: List[Invocation]):
+        """Trace context for the batch's ``run_batch`` call: serving-engine
+        spans (prefill/decode) emitted during execution nest under the
+        lead invocation's ``execute`` span."""
+        import contextlib
+        lead = batch[0]
+        if not TRACER.enabled or lead.trace_id is None:
+            return contextlib.nullcontext()
+        root = lead.span_id or f"inv{lead.inv_id}"
+        return TRACER.ctx(lead.trace_id, f"{root}/a{lead.attempt}/execute")
 
     def _on_device(self, widx: int):
         """Pin this worker's batch to its local device (no-op without jax)."""

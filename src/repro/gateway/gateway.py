@@ -22,6 +22,7 @@ from repro.core.events import Invocation
 from repro.core.runtime import RuntimeDef
 from repro.gateway.backends import Backend
 from repro.gateway.future import InvocationFuture
+from repro.obs import TRACER
 
 
 class Gateway:
@@ -85,6 +86,17 @@ class Gateway:
                          config=dict(config or {}), r_start=at,
                          workflow=workflow, step=step,
                          **({"tenant": tenant} if tenant else {}))
+        if TRACER.enabled:
+            # trace context is assigned here, at the front door, so it is
+            # identical across backends and rides the cluster RPC frames
+            # verbatim; workflow steps share one trace under a synthetic
+            # workflow root span
+            inv.trace_id = f"wf:{workflow}" if workflow else \
+                f"inv:{inv.inv_id}"
+            inv.span_id = f"inv{inv.inv_id}"
+            if workflow:
+                TRACER.workflow_root(
+                    workflow, at if at is not None else self.backend.now())
         self.backend.submit(inv)
         fut = InvocationFuture(inv, self.backend)
         self.futures.append(fut)

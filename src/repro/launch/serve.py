@@ -36,6 +36,7 @@ record).
 from __future__ import annotations
 
 import argparse
+import atexit
 import json
 
 from repro.configs import get_config
@@ -102,6 +103,11 @@ def main(argv=None):
                     help="after the run, dump the metrics collector to "
                          "PATH — JSON for .json paths, Prometheus text "
                          "otherwise")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable invocation tracing and write the run's "
+                         "span tree to PATH as Chrome/Perfetto "
+                         "trace_event JSON (load in ui.perfetto.dev; "
+                         "docs/observability.md)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV cache page size in tokens for real engines "
                          "(0 = dense per-slot cache, the paged engine's "
@@ -182,6 +188,38 @@ def main(argv=None):
             batch_wait_s=(args.batch_wait_ms / 1e3
                           if args.batch_wait_ms is not None else 0.002)))
 
+    m = gw.metrics
+    if args.trace_out:
+        # tracing on before the first submit, so spans ride every event
+        # from the front door; the tracer shares the backend's clock and
+        # feeds per-runtime span summaries into the metrics collector
+        from repro import obs
+        obs.enable(clock=gw.backend.now, metrics=m)
+
+    # fault-injection runs and Ctrl-C must not lose the snapshots: the
+    # dumps run atexit AND in the finally below, once-flagged so a clean
+    # exit does not write twice
+    _flushed = []
+
+    def flush_outputs():
+        if _flushed:
+            return
+        _flushed.append(True)
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                if args.metrics_out.endswith(".json"):
+                    json.dump(m.to_json(), f, indent=2)
+                else:
+                    f.write(m.prometheus_text())
+            print(f"wrote {args.metrics_out}")
+        if args.trace_out:
+            from repro import obs
+            n = obs.export(args.trace_out)
+            print(f"wrote {args.trace_out} ({n} trace events)")
+
+    if args.metrics_out or args.trace_out:
+        atexit.register(flush_outputs)
+
     tok = ByteTokenizer()
     prompts = [tok.encode(t) for t in
                ["the quick brown fox jumps", "hardware accelerators",
@@ -221,118 +259,123 @@ def main(argv=None):
         rt_ids.append(gw.register(rdef))
 
     plane = None
-    if args.slo_ms is not None or args.min_warm is not None or \
-            args.tenant_quota:
-        quotas = {}
-        for spec_str in args.tenant_quota or []:
-            name, _, rate_s = spec_str.partition("=")
-            if not name or not rate_s:
-                ap.error(f"--tenant-quota {spec_str!r}: expected "
-                         f"NAME=RATE[:BURST]")
-            rate_part, _, burst_part = rate_s.partition(":")
-            rate = float(rate_part)
-            burst = float(burst_part) if burst_part else 2.0 * rate
-            quotas[name] = (rate, burst)
-        plane = ControlPlane(ControlPlaneConfig(
-            tick_interval_s=5.0 if mode == "sim" else 0.5,
-            # the sim's pre-provisioned pods are the capacity floor (they
-            # are not drainable); engine/cluster floor at one worker
-            slo=(SLOPolicy(slo_rlat_p99_s=args.slo_ms / 1e3,
-                           min_units=pods if mode == "sim" else 1)
-                 if args.slo_ms is not None else None),
-            warm=(WarmPolicy(min_warm={rid: args.min_warm
-                                       for rid in rt_ids})
-                  if args.min_warm is not None else None),
-            admission=(AdmissionPolicy(tenant_quotas=quotas)
-                       if quotas else None),
-        )).attach(gw.backend)
-        plane.start()
-
     injector = None
-    if args.fault_spec:
-        spec_text = args.fault_spec
-        if spec_text.startswith("@"):
-            with open(spec_text[1:]) as f:
-                spec_text = f.read()
-        injector = inject(gw.backend, parse_fault_spec(spec_text))
+    try:
+        if args.slo_ms is not None or args.min_warm is not None or \
+                args.tenant_quota:
+            quotas = {}
+            for spec_str in args.tenant_quota or []:
+                name, _, rate_s = spec_str.partition("=")
+                if not name or not rate_s:
+                    ap.error(f"--tenant-quota {spec_str!r}: expected "
+                             f"NAME=RATE[:BURST]")
+                rate_part, _, burst_part = rate_s.partition(":")
+                rate = float(rate_part)
+                burst = float(burst_part) if burst_part else 2.0 * rate
+                quotas[name] = (rate, burst)
+            plane = ControlPlane(ControlPlaneConfig(
+                tick_interval_s=5.0 if mode == "sim" else 0.5,
+                # the sim's pre-provisioned pods are the capacity floor
+                # (they are not drainable); engine/cluster floor at one
+                slo=(SLOPolicy(slo_rlat_p99_s=args.slo_ms / 1e3,
+                               min_units=pods if mode == "sim" else 1)
+                     if args.slo_ms is not None else None),
+                warm=(WarmPolicy(min_warm={rid: args.min_warm
+                                           for rid in rt_ids})
+                      if args.min_warm is not None else None),
+                admission=(AdmissionPolicy(tenant_quotas=quotas)
+                           if quotas else None),
+            )).attach(gw.backend)
+            plane.start()
 
-    cfg_run = {"max_new_tokens": args.max_new_tokens}
-    if args.workflow:
-        # composition demo: each workflow is a 3-step chain whose steps
-        # round-robin over the registered arch runtimes; step i+1's
-        # prompts are step i's generations, fetched from the object store
-        wf_futs = []
-        for w in range(args.workflow):
-            wf = Workflow(f"chain{w}")
-            prev = wf.step("generate", rt_ids[w % len(rt_ids)],
-                           data_ref=data_ref, config=cfg_run)
-            for j, stage in enumerate(("refine", "polish")):
-                prev = wf.step(stage, rt_ids[(w + j + 1) % len(rt_ids)],
-                               after=prev, config=cfg_run, retries=1)
-            wf_futs.append(gw.submit_workflow(wf))
-        wf_ok = True
-        for fut in wf_futs:
-            try:
-                fut.result()
-            except WorkflowStepError as e:
-                print(f"  workflow {fut.name} FAILED: {e}")
-                wf_ok = False
-            print(f"  workflow {fut.name}: {fut.statuses()}")
-            wf_ok &= all(s == "done" for s in fut.statuses().values())
-    else:
-        for i in range(args.events):
-            gw.invoke(rt_ids[i % len(rt_ids)], data_ref=data_ref,
-                      config=cfg_run, at=0.5 * i)
-        gw.drain()
+        if args.fault_spec:
+            spec_text = args.fault_spec
+            if spec_text.startswith("@"):
+                with open(spec_text[1:]) as f:
+                    spec_text = f.read()
+            injector = inject(gw.backend, parse_fault_spec(spec_text))
 
-    m = gw.metrics
-    ok = sum(i.success for i in m.completed)
-    print(f"[{gw.backend.name}] {ok}/{len(m.completed)} events succeeded")
-    for inv in m.completed:
-        print(f"  ev{inv.inv_id} rt={inv.runtime_id:28s} "
-              f"acc={inv.accelerator} cold={int(inv.cold_start)} "
-              f"ELat={inv.elat:.3f}s RLat={inv.rlat:.3f}s")
-    if mode == "sim":
-        for node in gw.backend.cluster.nodes:
-            print(f"{node.name}: cold={node.n_cold_starts} "
-                  f"warm={node.n_warm_starts}")
-    elif mode == "cluster":
-        st = gw.backend.stats()
-        for name, rep in sorted(st.get("workers", {}).items()):
-            ws = rep.get("stats") or {}
-            print(f"{name}: pid={ws.get('pid')} "
-                  f"batches={ws.get('n_batches', 0)} "
-                  f"cold={ws.get('n_cold_starts', 0)} "
-                  f"warm={ws.get('n_warm_starts', 0)} "
-                  f"settled={ws.get('n_settled', 0)}")
-        print(f"master: settled={st.get('settled')} "
-              f"requeued={st.get('requeued')} "
-              f"workers_lost={st.get('workers_lost')} "
-              f"duplicate_settles={st.get('duplicate_settles')}")
-    else:
-        eb = gw.backend
-        sizes = eb.batch_sizes or [0]
-        print(f"local: cold={eb.n_cold_starts} warm={eb.n_warm_starts} "
-              f"prewarmed={eb.n_prewarms} batches={eb.n_batches} "
-              f"max_batch_served={max(sizes)} rejected={eb.n_rejected}")
-    if plane is not None:
-        plane.stop()
-        print(f"controlplane: {plane.summary()}")
-    if injector is not None:
-        injector.disarm()
-        s = m.summary()
-        print(f"faults: {injector.summary()} retried={s['retried']:.0f} "
-              f"failed={s['failed']:.0f} "
-              f"exhausted={s['retries_exhausted']:.0f}")
-    if args.metrics_out:
-        with open(args.metrics_out, "w") as f:
-            if args.metrics_out.endswith(".json"):
-                json.dump(m.to_json(), f, indent=2)
-            else:
-                f.write(m.prometheus_text())
-        print(f"wrote {args.metrics_out}")
-    if handle is not None:
-        handle.close()      # shutdown master, reap worker processes
+        cfg_run = {"max_new_tokens": args.max_new_tokens}
+        if args.workflow:
+            # composition demo: each workflow is a 3-step chain whose
+            # steps round-robin over the registered arch runtimes; step
+            # i+1's prompts are step i's generations, fetched from the
+            # object store
+            wf_futs = []
+            for w in range(args.workflow):
+                wf = Workflow(f"chain{w}")
+                prev = wf.step("generate", rt_ids[w % len(rt_ids)],
+                               data_ref=data_ref, config=cfg_run)
+                for j, stage in enumerate(("refine", "polish")):
+                    prev = wf.step(stage,
+                                   rt_ids[(w + j + 1) % len(rt_ids)],
+                                   after=prev, config=cfg_run, retries=1)
+                wf_futs.append(gw.submit_workflow(wf))
+            wf_ok = True
+            for fut in wf_futs:
+                try:
+                    fut.result()
+                except WorkflowStepError as e:
+                    print(f"  workflow {fut.name} FAILED: {e}")
+                    wf_ok = False
+                print(f"  workflow {fut.name}: {fut.statuses()}")
+                wf_ok &= all(s == "done"
+                             for s in fut.statuses().values())
+        else:
+            for i in range(args.events):
+                gw.invoke(rt_ids[i % len(rt_ids)], data_ref=data_ref,
+                          config=cfg_run, at=0.5 * i)
+            gw.drain()
+
+        ok = sum(i.success for i in m.completed)
+        print(f"[{gw.backend.name}] {ok}/{len(m.completed)} events "
+              f"succeeded")
+        for inv in m.completed:
+            print(f"  ev{inv.inv_id} rt={inv.runtime_id:28s} "
+                  f"acc={inv.accelerator} cold={int(inv.cold_start)} "
+                  f"ELat={inv.elat:.3f}s RLat={inv.rlat:.3f}s")
+        if mode == "sim":
+            for node in gw.backend.cluster.nodes:
+                print(f"{node.name}: cold={node.n_cold_starts} "
+                      f"warm={node.n_warm_starts}")
+        elif mode == "cluster":
+            st = gw.backend.stats()
+            for name, rep in sorted(st.get("workers", {}).items()):
+                ws = rep.get("stats") or {}
+                print(f"{name}: pid={ws.get('pid')} "
+                      f"batches={ws.get('n_batches', 0)} "
+                      f"cold={ws.get('n_cold_starts', 0)} "
+                      f"warm={ws.get('n_warm_starts', 0)} "
+                      f"settled={ws.get('n_settled', 0)}")
+            print(f"master: settled={st.get('settled')} "
+                  f"requeued={st.get('requeued')} "
+                  f"workers_lost={st.get('workers_lost')} "
+                  f"duplicate_settles={st.get('duplicate_settles')}")
+        else:
+            eb = gw.backend
+            sizes = eb.batch_sizes or [0]
+            print(f"local: cold={eb.n_cold_starts} "
+                  f"warm={eb.n_warm_starts} "
+                  f"prewarmed={eb.n_prewarms} batches={eb.n_batches} "
+                  f"max_batch_served={max(sizes)} "
+                  f"rejected={eb.n_rejected}")
+        if plane is not None:
+            plane.stop()
+            print(f"controlplane: {plane.summary()}")
+        if injector is not None:
+            injector.disarm()
+            s = m.summary()
+            print(f"faults: {injector.summary()} "
+                  f"retried={s['retried']:.0f} "
+                  f"failed={s['failed']:.0f} "
+                  f"exhausted={s['retries_exhausted']:.0f}")
+    finally:
+        # faults/Ctrl-C must not lose the snapshots: flush before
+        # teardown (the atexit hook is the once-flagged second line
+        # of defense)
+        flush_outputs()
+        if handle is not None:
+            handle.close()  # shutdown master, reap worker processes
     if args.workflow:
         # a retried-then-recovered step leaves its failed attempt in the
         # metrics; the demo's verdict is whether the workflows completed

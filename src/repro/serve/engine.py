@@ -38,6 +38,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.data.tokenizer import EOS
 from repro.models import model as M
+from repro.obs import TRACER, jax_profile
 from repro.serve.paging import BlockAllocator, pages_for
 
 DEFAULT_PAGE_SIZE = 16
@@ -333,6 +334,7 @@ class ServingEngine:
         slot = slots[0]
 
         if not self.paged:
+            t0 = TRACER.now() if TRACER.enabled else 0.0
             prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
             logits, slot_cache = self._prefill(self.params,
                                                {"tokens": prompt})
@@ -342,6 +344,7 @@ class ServingEngine:
             self.active[slot] = req
             self.pos[slot] = len(req.prompt)
             self.n_prefills += 1
+            self._trace_span("prefill", t0, len(req.prompt))
             return True
 
         # resume-aware: a preempted request re-prefills prompt + all
@@ -362,6 +365,7 @@ class ServingEngine:
         return True
 
     def _full_prefill(self, slot: int, req: Request, seq: List[int]) -> None:
+        t0 = TRACER.now() if TRACER.enabled else 0.0
         prompt = jnp.asarray(seq, jnp.int32)[None, :]
         pages = jnp.asarray(
             self.allocator.table(slot)[:pages_for(len(seq), self.page)],
@@ -369,6 +373,7 @@ class ServingEngine:
         logits, self.cache = self._prefill_install(
             self.params, self.cache, prompt, pages, slot)
         self.n_prefills += 1
+        self._trace_span("prefill", t0, len(seq))
         self._finish_prefill(slot, req, seq, logits)
 
     def _finish_prefill(self, slot: int, req: Request, seq: List[int],
@@ -400,6 +405,14 @@ class ServingEngine:
         for (p, C, width), members in groups.items():
             self._chunk_group(members, p, C, width)
 
+    def _trace_span(self, name: str, t0: float, tokens: int) -> None:
+        """Close one engine span against the batch executor's thread-local
+        trace context (how prefill/decode steps land under the owning
+        invocation's ``execute`` span); no-op untraced."""
+        if TRACER.enabled and TRACER.current() is not None:
+            TRACER.complete(name, t0, TRACER.now(),
+                            attrs={"tokens": int(tokens)})
+
     def _chunk_group(self, members: List[int], p: int, C: int,
                      width: int) -> None:
         kb = _next_pow2(len(members))
@@ -410,11 +423,13 @@ class ServingEngine:
             piece[r] = self._seq[slot][p:p + C]
             tab = self.allocator.table(slot)[:width]
             table[r, :len(tab)] = tab
+        t0 = TRACER.now() if TRACER.enabled else 0.0
         logits, self.cache = self._chunk_batch(
             self.params, self.cache, jnp.asarray(piece),
             jnp.asarray(p, jnp.int32), jnp.asarray(table),
             jnp.asarray(rows, jnp.int32))
         self.n_prefill_chunks += len(members)
+        self._trace_span("prefill_chunk", t0, C * len(members))
         finished = [(r, s) for r, s in enumerate(members)
                     if p + C == len(self._seq[s])]
         for r, slot in enumerate(members):
@@ -468,6 +483,12 @@ class ServingEngine:
         page growth / preemption beforehand).  Dense: the seed behavior —
         one decode step over the active slots.
         """
+        if TRACER.enabled:
+            with jax_profile("serve.step"):
+                return self._step()
+        return self._step()
+
+    def _step(self) -> List[Request]:
         if not self.paged:
             return self._step_decode_dense()
         while self.waiting and self.free_slots():
@@ -480,12 +501,15 @@ class ServingEngine:
     def _step_decode_dense(self) -> List[Request]:
         if all(r is None for r in self.active):
             return []
+        t0 = TRACER.now() if TRACER.enabled else 0.0
+        n_active = sum(r is not None for r in self.active)
         tokens = jnp.asarray(self.last_token, jnp.int32)[:, None]
         pos = jnp.asarray(self.pos, jnp.int32)
         logits, self.cache = self._decode(self.params, self.cache, tokens,
                                           pos)
         self.n_decode_steps += 1
         greedy_tok = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        self._trace_span("decode", t0, n_active)
 
         finished = []
         for i, req in enumerate(self.active):
@@ -537,11 +561,13 @@ class ServingEngine:
         tokens = np.where(mask, self.last_token, 0).astype(np.int32)
         pos = np.where(mask, self.pos, 0).astype(np.int32)
 
+        t0 = TRACER.now() if TRACER.enabled else 0.0
         logits, self.cache = self._decode_paged(
             self.params, self.cache, jnp.asarray(tokens)[:, None],
             jnp.asarray(pos), jnp.asarray(tables), jnp.asarray(mask))
         self.n_decode_steps += 1
         greedy_tok = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        self._trace_span("decode", t0, len(decoding))
 
         finished = []
         for i in decoding:
