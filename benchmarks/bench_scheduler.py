@@ -33,13 +33,21 @@ def run_policy(policy: str, seed: int = 0) -> Dict[str, float]:
         "rlat_p50": s["rlat_p50"],
         "rlat_p99": s["rlat_p99"],
         "r_success": s["r_success"],
+        # heterogeneous-fleet pricing: each accelerator's busy seconds at
+        # its own type's dollar rate and active wattage (GPU $0.50/hr at
+        # 41 W vs VPU $0.10/hr at 2 W — the objective policies trade
+        # these against the per-type ELat profiles)
         "cost_usd": sum(a.total_busy_time / 3600.0 * a.spec.cost_per_hour
+                        for a in node.accelerators),
+        "energy_j": sum(a.total_busy_time * a.spec.active_watts
                         for a in node.accelerators),
     }
 
 
 def bench() -> Dict[str, Dict[str, float]]:
-    return {p: run_policy(p) for p in ("fifo", "warm", "cost")}
+    return {p: run_policy(p)
+            for p in ("fifo", "warm", "cost", "hetero-latency",
+                      "hetero-cost", "hetero-energy")}
 
 
 if __name__ == "__main__":

@@ -289,6 +289,39 @@ def _sec_tracing() -> Dict[str, Any]:
     return tr
 
 
+def _sec_hetero() -> Dict[str, Any]:
+    # --- heterogeneous placement: objective frontier + data locality ----
+    from benchmarks.bench_hetero import bench as hetero_bench
+    t0 = time.perf_counter()
+    h = hetero_bench(real=True)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(h), 1)
+    for obj in ("latency", "cost", "energy"):
+        r = h[f"sim/{obj}"]
+        _row(f"hetero_{obj}", us,
+             f"p99={r['rlat_p99_s']:.1f}s holds={int(r['holds_slo'])} "
+             f"fleet=${r['fleet_cost_usd']:.3f} "
+             f"energy={r['energy_joules']:.0f}J "
+             f"by_type={r['invocations_by_type']}")
+    fr = h["sim/frontier"]
+    _row("hetero_frontier", us,
+         f"cost_cut={fr['cost_cut_fraction']:.2f} "
+         f"(gate >=0.20) energy_cut={fr['energy_cut_fraction']:.2f} "
+         f"holds_slo_all={int(fr['holds_slo_all'])} "
+         f"cost_cut_ok={int(fr['cost_cut_ok'])}")
+    lo = h["sim/locality"]
+    _row("hetero_locality", us,
+         f"rate={lo['locality_rate']:.2f} "
+         f"hits={lo['locality_hits']}/{lo['eligible_steps']} "
+         f"store_gets={lo['store_gets_delta']} "
+         f"ok={int(lo['locality_ok'])} (floor 0.8)")
+    ag = h["cluster/agreement"]
+    _row("hetero_agreement", us,
+         f"sim={ag['sim_hits']}/{ag['eligible']} "
+         f"cluster={ag['cluster_hits']}/{ag['eligible']} "
+         f"agreement_ok={int(ag['agreement_ok'])}")
+    return h
+
+
 SECTIONS: List[Tuple[str, Callable[[], Dict[str, Any]]]] = [
     ("scaling", _sec_scaling),
     ("elat", _sec_elat),
@@ -300,6 +333,7 @@ SECTIONS: List[Tuple[str, Callable[[], Dict[str, Any]]]] = [
     ("controlplane", _sec_controlplane),
     ("faults", _sec_faults),
     ("cluster", _sec_cluster),
+    ("hetero", _sec_hetero),
     ("serving", _sec_serving),
     ("roofline", _sec_roofline),
     ("scale", _sec_scale),

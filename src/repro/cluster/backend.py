@@ -52,9 +52,9 @@ from repro.obs import TRACER
 # r_end is applied LAST (after the outcome blob lands and watchers fire)
 # so ``done()`` never races ahead of the stored result
 _SETTLE_FIELDS = ("r_start", "n_start", "e_start", "e_end", "n_end",
-                  "success", "error", "cold_start", "prewarmed", "node",
-                  "accelerator", "attempt", "retries_exhausted",
-                  "rejected", "result_ref")
+                  "success", "error", "cold_start", "prewarmed",
+                  "locality_hit", "node", "accelerator", "attempt",
+                  "retries_exhausted", "rejected", "result_ref")
 
 
 class MirrorStore(ObjectStore):
@@ -304,8 +304,13 @@ class ClusterBackend(Backend):
         return True
 
     # -- control plane ---------------------------------------------------
-    def capacity_hooks(self) -> "ClusterCapacityHooks":
-        """Control-plane surface over the cluster (cached)."""
+    def capacity_hooks(self, objective: str = "latency") \
+            -> "ClusterCapacityHooks":
+        """Control-plane surface over the cluster (cached).
+
+        ``objective`` is accepted for signature parity with the sim hooks
+        (the plane forwards it unconditionally); worker processes are a
+        single capacity pool, so there is no per-type spend to steer."""
         if self._hooks is None:
             self._hooks = ClusterCapacityHooks(self)
         return self._hooks
@@ -313,6 +318,12 @@ class ClusterBackend(Backend):
     def stats(self) -> Dict[str, Any]:
         """The master's live snapshot (queue/workers/settlements)."""
         return self.transport.stats()
+
+    def backlog_by_type(self) -> Dict[str, Dict[str, int]]:
+        """Per-accelerator-type queue/busy/free/warm, from the master's
+        heartbeat ledger (each worker self-reports its ``acc_type``)."""
+        return {t: dict(row)
+                for t, row in self.stats().get("by_type", {}).items()}
 
     # -- lifecycle -------------------------------------------------------
     def shutdown(self) -> None:
@@ -405,11 +416,16 @@ class WorkerLauncher:
     ``stop_all()`` is the polite SIGTERM-then-SIGKILL shutdown."""
 
     def __init__(self, addr: str, *, max_batch: int = 8,
-                 heartbeat_s: float = 0.5, max_warm: int = 8):
+                 heartbeat_s: float = 0.5, max_warm: int = 8,
+                 acc_types: Optional[Sequence[str]] = None):
         self.addr = addr
         self.max_batch = max_batch
         self.heartbeat_s = heartbeat_s
         self.max_warm = max_warm
+        # acc_types[i] is worker i's advertised accelerator type (wraps
+        # around when more workers spawn than types were given); None
+        # leaves the worker's host-jax default
+        self.acc_types = list(acc_types) if acc_types else None
         self._procs: List[Optional[subprocess.Popen]] = []
 
     def _env(self) -> Dict[str, str]:
@@ -437,6 +453,9 @@ class WorkerLauncher:
                    "--max-batch", str(self.max_batch),
                    "--heartbeat-s", str(self.heartbeat_s),
                    "--max-warm", str(self.max_warm)]
+            if self.acc_types:
+                cmd += ["--acc-type",
+                        self.acc_types[idx % len(self.acc_types)]]
             self._procs.append(subprocess.Popen(
                 cmd, env=self._env(), stdout=subprocess.DEVNULL))
             names.append(name)
@@ -521,6 +540,7 @@ def start_cluster(n_workers: int, *, lease_s: float = 30.0,
                   keeper_interval_s: float = 0.25,
                   heartbeat_s: float = 0.5, max_batch: int = 8,
                   max_warm: int = 8,
+                  acc_types: Optional[Sequence[str]] = None,
                   ready_timeout_s: float = 20.0) -> ClusterHandle:
     """Bring up master + ``n_workers`` worker processes on loopback.
 
@@ -534,7 +554,8 @@ def start_cluster(n_workers: int, *, lease_s: float = 30.0,
                     keeper_interval_s=keeper_interval_s)
     addr = master.serve()
     launcher = WorkerLauncher(addr, max_batch=max_batch,
-                              heartbeat_s=heartbeat_s, max_warm=max_warm)
+                              heartbeat_s=heartbeat_s, max_warm=max_warm,
+                              acc_types=acc_types)
     launcher.spawn(n_workers)
     backend = ClusterBackend(RpcTransport(addr), launcher=launcher)
     deadline = time.monotonic() + ready_timeout_s

@@ -70,6 +70,18 @@ SETTLE_LOG_MAX = 8192
 # a long-poll never parks a connection thread longer than this per call
 MAX_POLL_S = 60.0
 
+# data-locality grace window: an event whose input blob is resident in
+# another worker's cache is withheld from non-owner takes this long after
+# its RStart, giving the owner (typically parked in ``take`` and woken by
+# the submit) first claim; past the window anyone serves it, so a busy or
+# dead owner never strands the event.  Wider than the sim's window — the
+# owner must round-trip a long-poll wakeup, not a clock callback.
+LOCALITY_DEFER_S = 0.15
+
+# residency hints retained (ref -> producing worker); FIFO-trimmed like
+# the settle log — a hint is an optimization, never correctness
+RESIDENT_MAX = 8192
+
 
 class Master:
     """The single stateful process of a cluster (see module docstring)."""
@@ -113,6 +125,13 @@ class Master:
         # master-observed per-worker take/settle counts — authoritative
         # over the heartbeat-carried copies, which lag by up to a beat
         self._worker_counts: Dict[str, Dict[str, int]] = {}
+        # data-locality hints: result ref -> worker that produced it (its
+        # cache holds the blob), and the inverse affinity index — worker
+        # -> pending event ids whose data_ref is resident there.  Both
+        # are hints: entries go stale (cache eviction, worker death) and
+        # the take path degrades to an ordinary RPC fetch.
+        self._resident: Dict[str, str] = {}
+        self._affine: Dict[str, set] = {}
         self._prewarm_rr = 0
         self._shutdown = False
 
@@ -228,6 +247,13 @@ class Master:
             self._inflight[inv.inv_id] = inv
             self.n_submitted += 1
             self.queue.publish(inv, now=self.now())
+            if inv.data_ref:
+                # affinity index: route this event to the worker whose
+                # cache already holds its input (a chained workflow step
+                # lands on its parent's worker and reads locally)
+                owner = self._resident.get(inv.data_ref)
+                if owner is not None:
+                    self._affine.setdefault(owner, set()).add(inv.inv_id)
             self._cond.notify_all()
         return {"inv_id": inv.inv_id}
 
@@ -250,7 +276,7 @@ class Master:
                 if self._shutdown:
                     return {"events": [], "shutdown": True,
                             "catalog_version": self._catalog_version}
-                inv = self.queue.take_any(rids, now=now, holder=worker) \
+                inv = self._take_for_worker_locked(worker, rids, now) \
                     if rids else None
                 if inv is not None:
                     rdef = self.registry.get(inv.runtime_id)
@@ -279,6 +305,35 @@ class Master:
                             "catalog_version": self._catalog_version}
                 # bounded wait chunks double as parked-take heartbeats
                 self._cond.wait(timeout=min(remaining, 0.5))
+
+    def _take_for_worker_locked(self, worker: str, rids: set,
+                                now: float) -> Optional[Invocation]:
+        """One event for ``worker``: affinity first (its cache holds the
+        event's input), then the ordinary oldest-first take — skipping
+        events still inside another owner's locality defer window."""
+        aff = self._affine.get(worker)
+        if aff:
+            for iid in sorted(aff):
+                cand = self._inflight.get(iid)
+                if cand is None:
+                    aff.discard(iid)        # settled meanwhile
+                    continue
+                if cand.runtime_id not in rids:
+                    continue
+                taken = self.queue.take_id(iid, now=now, holder=worker)
+                if taken is not None:
+                    aff.discard(iid)
+                    return taken
+
+        def takeable(cand: Invocation) -> bool:
+            if cand.runtime_id not in rids:
+                return False
+            owner = self._resident.get(cand.data_ref) \
+                if cand.data_ref else None
+            if owner is None or owner == worker:
+                return True
+            return now - (cand.r_start or 0.0) >= LOCALITY_DEFER_S
+        return self.queue.take_where(takeable, now=now, holder=worker)
 
     def op_settle(self, worker: str,
                   records: List[Dict[str, Any]]) -> Dict[str, Any]:
@@ -313,6 +368,7 @@ class Master:
         inv.accelerator = f.get("accelerator")
         inv.cold_start = bool(f.get("cold_start"))
         inv.prewarmed = bool(f.get("prewarmed"))
+        inv.locality_hit = bool(f.get("locality_hit"))
         # monotone §V-A clamps: a worker's hello-learned clock offset may
         # lag the master's by the handshake RTT; clamp e_start up to the
         # take stamp but preserve the worker-MEASURED duration (ELat must
@@ -340,6 +396,11 @@ class Master:
         inv.error = f.get("error")
         blob = decode_blob(rec["blob"])
         self._record_settlement_locked(inv, blob, spans=rec.get("spans"))
+        # the settling worker pre-cached its own outcome — note the
+        # residency so a chained child routes to it and reads locally
+        self._resident[inv.result_ref] = worker
+        while len(self._resident) > RESIDENT_MAX:
+            self._resident.pop(next(iter(self._resident)))
         counts = self._worker_counts.setdefault(
             worker, {"n_batches": 0, "n_settled": 0})
         counts["n_settled"] += 1
@@ -486,7 +547,35 @@ class Master:
                 "catalog_version": self._catalog_version,
                 "runtimes": self.registry.ids(),
                 "workers": self._worker_report_locked(now),
+                "resident_refs": len(self._resident),
+                "by_type": self._by_type_locked(now),
             }
+
+    def _by_type_locked(self, now: float) -> Dict[str, Dict[str, int]]:
+        """Per-accelerator-type pressure across the live workers —
+        ``type -> {queued, busy, free, warm}`` assembled from heartbeat
+        stats (``acc_type``/``busy``/``n_warm``) and the queue's runtime
+        index (a runtime with no sim profiles is untyped: it runs on any
+        worker holding its fn, so it counts toward every type)."""
+        out: Dict[str, Dict[str, int]] = {}
+        queued_by_rid = self.queue.counts_by_runtime()
+        for rep in self.keeper.report(now).values():
+            stats = rep.get("stats") or {}
+            t = stats.get("acc_type") or "host-jax"
+            row = out.setdefault(t, {"queued": 0, "busy": 0, "free": 0,
+                                     "warm": 0})
+            busy = int(stats.get("busy", 0))
+            row["busy"] += busy
+            row["free"] += max(1 - busy, 0)     # one batch slot per worker
+            row["warm"] += int(stats.get("n_warm",
+                                         len(stats.get("warm_keys") or ())))
+        for t, row in out.items():
+            row["queued"] = sum(
+                cnt for rid, cnt in queued_by_rid.items()
+                if rid in self.registry
+                and (self.registry.get(rid).supports(t)
+                     or not self.registry.get(rid).profiles))
+        return out
 
     def _worker_report_locked(self, now: float) -> Dict[str, Any]:
         """Keeper report with the master-observed take/settle counts
@@ -533,6 +622,12 @@ class Master:
                     self.n_workers_lost += 1
                     self._directives.pop(worker, None)
                     self._worker_counts.pop(worker, None)
+                    # its cache died with it: drop residency hints and
+                    # affinity routing so deferred events free up at once
+                    self._affine.pop(worker, None)
+                    for ref in [r for r, w in self._resident.items()
+                                if w == worker]:
+                        del self._resident[ref]
                     if self.queue.release_holder(worker, now):
                         changed = True
                 if self.queue.reap(now):

@@ -54,9 +54,9 @@ _LEN = struct.Struct(">I")
 _INV_FIELDS = (
     "runtime_id", "data_ref", "r_start", "n_start", "e_start", "e_end",
     "n_end", "r_end", "success", "accelerator", "node", "cold_start",
-    "result_ref", "error", "rejected", "prewarmed", "attempt",
-    "retries_exhausted", "tenant", "workflow", "step", "trace_id",
-    "span_id",
+    "result_ref", "error", "rejected", "prewarmed", "locality_hit",
+    "attempt", "retries_exhausted", "tenant", "workflow", "step",
+    "trace_id", "span_id",
 )
 
 

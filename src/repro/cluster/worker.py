@@ -36,7 +36,7 @@ from collections import OrderedDict
 from typing import Any, Dict, List, Optional
 
 from repro.core.events import Invocation
-from repro.core.runtime import RuntimeRegistry, run_batch
+from repro.core.runtime import HOST_ACC, RuntimeRegistry, run_batch
 from repro.core.storage import make_outcome, unwrap_outcome
 from repro.cluster.rpc import (RpcClient, decode_blob, encode_blob,
                                inv_from_wire)
@@ -51,9 +51,11 @@ class Worker:
 
     def __init__(self, addr: str, name: str, *, max_batch: int = 8,
                  heartbeat_s: float = 1.0, max_warm: int = 8,
+                 acc_type: str = HOST_ACC,
                  connect_timeout_s: float = 10.0):
         self.addr = addr
         self.name = name
+        self.acc_type = acc_type or HOST_ACC
         self.max_batch = max(int(max_batch), 1)
         self.heartbeat_s = max(float(heartbeat_s), 0.05)
         self.max_warm = max(int(max_warm), 1)
@@ -79,6 +81,8 @@ class Worker:
         self.n_prewarms = 0
         self.n_settled = 0
         self.n_settle_refused = 0
+        self.n_data_local = 0       # input reads served from the cache
+        self._inflight_n = 0        # events mid-execution (heartbeat stat)
 
     def now(self) -> float:
         """Current time on the master clock."""
@@ -132,22 +136,30 @@ class Worker:
         self._beat_now.set()
 
     # -- data plane ------------------------------------------------------
-    def _fetch(self, ref: str) -> Any:
-        """Input blob by ref via RPC, through a small local LRU cache."""
+    def _fetch(self, ref: str):
+        """``(value, local)`` for an input blob — via the local LRU cache
+        (``local=True``: no RPC round-trip; results this worker produced
+        are pre-cached at settle, so a chained child placed here reads
+        its parent's output locally) or the master's ``get`` op."""
         if not ref:
-            return None
+            return None, False
         with self._lock:
             if ref in self._data_cache:
                 self._data_cache.move_to_end(ref)
-                return self._data_cache[ref]
+                self.n_data_local += 1
+                return self._data_cache[ref], True
         rsp = self._main.request("get", key=ref)
         blob = decode_blob(rsp["blob"])
         value = blob if rsp.get("raw") else pickle.loads(blob)
+        self._cache_put(ref, value)
+        return value, False
+
+    def _cache_put(self, ref: str, value: Any) -> None:
         with self._lock:
             self._data_cache[ref] = value
+            self._data_cache.move_to_end(ref)
             while len(self._data_cache) > DATA_CACHE_MAX:
                 self._data_cache.popitem(last=False)
-        return value
 
     # -- warm pool (the engine backend's semantics, process-local) -------
     def _acquire_handle(self, rdef, key: str):
@@ -192,11 +204,13 @@ class Worker:
         traced = any(inv.trace_id is not None for inv in batch)
         if traced and not TRACER.enabled:
             TRACER.enable(clock=self.now, prefix=f"{self.name}:")
+        self._inflight_n = len(batch)
         t_acq = self.now()
         handle, cold, prewarmed, err = self._acquire_handle(rdef, key)
         cold_end = self.now()
-        datas = [unwrap_outcome(self._fetch(inv.data_ref))
-                 for inv in batch]
+        fetched = [self._fetch(inv.data_ref) for inv in batch]
+        datas = [unwrap_outcome(v) for v, _ in fetched]
+        local_flags = [local for _, local in fetched]
         e_start = self.now()
         results: List[Any] = [None] * len(batch)
         if err is None:
@@ -210,19 +224,26 @@ class Worker:
                 err = repr(e)
         e_end = self.now()
         self.n_batches += 1
+        self._inflight_n = 0
 
         records = []
-        acc = f"{self.name}/pid{os.getpid()}"
-        for inv, result in zip(batch, results):
+        acc = f"{self.name}/pid{os.getpid()}({self.acc_type})"
+        for inv, result, local in zip(batch, results, local_flags):
             inv.success = err is None
             inv.error = err
-            blob = pickle.dumps(make_outcome(inv, result, err))
+            outcome = make_outcome(inv, result, err)
+            blob = pickle.dumps(outcome)
+            # pre-cache the outcome under its deterministic result key:
+            # when the master routes this result's consumer back here
+            # (residency hint), its _fetch is a local cache hit
+            self._cache_put(f"result:inv{inv.inv_id}", outcome)
             records.append({
                 "inv_id": inv.inv_id,
                 "blob": encode_blob(blob),
                 "fields": {"e_start": e_start, "e_end": e_end,
                            "success": err is None, "error": err,
                            "cold_start": cold, "prewarmed": prewarmed,
+                           "locality_hit": local,
                            "node": self.name, "accelerator": acc},
             })
         if traced and TRACER.enabled:
@@ -288,6 +309,10 @@ class Worker:
                 "n_prewarms": self.n_prewarms,
                 "n_settled": self.n_settled,
                 "n_settle_refused": self.n_settle_refused,
+                "acc_type": self.acc_type,
+                "busy": self._inflight_n,
+                "n_warm": len(warm_keys),
+                "n_data_local": self.n_data_local,
                 "warm_keys": warm_keys}
 
     def _heartbeat_loop(self) -> None:
@@ -347,9 +372,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--heartbeat-s", type=float, default=1.0)
     ap.add_argument("--max-warm", type=int, default=8)
+    ap.add_argument("--acc-type", default=HOST_ACC,
+                    help="accelerator type this worker reports "
+                         "(heterogeneity view in stats/metrics)")
     args = ap.parse_args(argv)
     worker = Worker(args.master, args.name, max_batch=args.max_batch,
-                    heartbeat_s=args.heartbeat_s, max_warm=args.max_warm)
+                    heartbeat_s=args.heartbeat_s, max_warm=args.max_warm,
+                    acc_type=args.acc_type)
     worker.run()
     return 0
 

@@ -54,6 +54,11 @@ class ControlPlaneConfig:
     slo: Optional[SLOPolicy] = None
     warm: Optional[WarmPolicy] = None
     admission: Optional[AdmissionPolicy] = None
+    # placement objective forwarded to the backend's capacity hooks:
+    # "latency" (default), "cost", or "energy" — on a heterogeneous sim
+    # fleet, scale-out and prewarm spend capacity on the cheapest /
+    # most-frugal accelerator type that still holds the SLO
+    objective: str = "latency"
 
 
 class ControlPlane:
@@ -84,6 +89,7 @@ class ControlPlane:
                                "plane per backend (configs are shareable, "
                                "planes are not)")
         self.backend = backend
+        hook_kwargs.setdefault("objective", self.cfg.objective)
         self.hooks = backend.capacity_hooks(**hook_kwargs)
         self.telemetry = TelemetryBus(backend.metrics, self.cfg.telemetry)
         if self.cfg.warm is not None:
@@ -161,9 +167,17 @@ class ControlPlane:
         with self._lock:
             now = self.backend.now()
             if isinstance(self.hooks, SimCapacityHooks):
-                self.hooks.fleet.account()      # node-seconds cost integral
+                for fleet in self.hooks.fleets:
+                    fleet.account()             # node-seconds cost integral
             snap = self.telemetry.sample(now, self.hooks)
             if self.scaler is not None:
+                if hasattr(self.hooks, "note_slo"):
+                    # SLO health gates the objective: cost/energy choose
+                    # the frugal type only while the SLO holds
+                    slo = self.scaler.policy.slo_rlat_p99_s
+                    self.hooks.note_slo(
+                        slo is None or snap.rlat_p99 is None
+                        or snap.rlat_p99 <= slo)
                 self.scaler.tick(snap, self.hooks)
             self.n_ticks += 1
         # the warm-pool pass runs OUTSIDE the plane lock: an engine

@@ -23,6 +23,21 @@ class AcceleratorSpec:
     cost_per_hour: float = 1.0     # for the cost-aware policy (beyond paper)
     # TPU adaptation: mesh-slice geometry (chips) — 0 for discrete devices
     chips: int = 0
+    # energy model (per-type): the device draws idle_watts whenever it is
+    # provisioned and active_watts while executing, so one invocation costs
+    # ``active_watts × ELat`` joules (the objective schedulers and the
+    # MetricsCollector's energy counters both price with these)
+    idle_watts: float = 0.0
+    active_watts: float = 0.0
+
+    def invocation_joules(self, busy_s: float) -> float:
+        """Energy of one invocation that kept the device active ``busy_s``
+        seconds (measured ELat + any cold start it absorbed)."""
+        return self.active_watts * max(busy_s, 0.0)
+
+    def invocation_dollars(self, busy_s: float) -> float:
+        """Accelerator-seconds cost of one invocation at this type's rate."""
+        return max(busy_s, 0.0) * self.cost_per_hour / 3600.0
 
 
 @dataclasses.dataclass

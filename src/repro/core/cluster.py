@@ -8,7 +8,7 @@ with service times calibrated to the paper's measured tiny-YOLOv2 medians.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.accelerator import Accelerator, AcceleratorSpec
 from repro.core.events import Invocation
@@ -25,10 +25,15 @@ from repro.obs import TRACER
 # ----------------------------------------------------------------------
 # Paper-calibrated constants (Hardless §V.B)
 # ----------------------------------------------------------------------
+# energy model: K600 board power 41 W TDP (≈10 W idle); the NCS stick
+# draws ~2 W active / ~0.5 W idle over USB — the heterogeneity the energy
+# objective exploits (a VPU invocation costs ~20x fewer joules)
 GPU_K600 = AcceleratorSpec(type="gpu-k600", slots=2, mem_bytes=1 << 30,
-                           cost_per_hour=0.50)
+                           cost_per_hour=0.50, idle_watts=10.0,
+                           active_watts=41.0)
 VPU_NCS = AcceleratorSpec(type="vpu-ncs", slots=1, mem_bytes=512 << 20,
-                          cost_per_hour=0.10)
+                          cost_per_hour=0.10, idle_watts=0.5,
+                          active_watts=2.0)
 TINYYOLO_GPU_ELAT_S = 1.675     # median ELat on K600 (paper §V.B)
 TINYYOLO_VPU_ELAT_S = 1.577     # median ELat on NCS  (paper §V.B)
 
@@ -81,6 +86,10 @@ class Cluster:
                  ) -> NodeManager:
         accs = [Accelerator(spec=s, local_id=f"{name}/acc{i}")
                 for i, s in enumerate(specs)]
+        for s in specs:
+            # the metrics collector prices each type's invocations
+            # (cost/energy counters) from the spec's model
+            self.metrics.register_accelerator(s)
         node = NodeManager(
             name, accs, clock=self.clock, queue=self.queue, store=self.store,
             registry=self.registry, metrics=self.metrics,
@@ -92,6 +101,31 @@ class Cluster:
             seed=self._seed + len(self.nodes))
         self.nodes.append(node)
         return node
+
+    def backlog_by_type(self) -> Dict[str, Dict[str, int]]:
+        """Per-accelerator-type pressure: queued events servable by the
+        type, busy/free slots, and warm instance count — the operator's
+        heterogeneity view (an event servable by several types counts
+        toward each; the aggregate ``backlog()`` stays the event count)."""
+        out: Dict[str, Dict[str, int]] = {}
+        queued_by_rid = self.queue.counts_by_runtime()
+        live = [n for n in self.nodes if not n.dead]
+        types = sorted({a.spec.type for n in live for a in n.accelerators})
+        for t in types:
+            queued = sum(cnt for rid, cnt in queued_by_rid.items()
+                         if rid in self.registry
+                         and self.registry.get(rid).supports(t))
+            busy = free = warm = 0
+            for n in live:
+                for a in n.accelerators:
+                    if a.spec.type != t:
+                        continue
+                    busy += a.busy_slots
+                    free += a.free_slots
+                    warm += len(a.warm)
+            out[t] = {"queued": queued, "busy": busy, "free": free,
+                      "warm": warm}
+        return out
 
     def register_runtime(self, rdef: RuntimeDef) -> None:
         self.registry.register(rdef)

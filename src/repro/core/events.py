@@ -55,6 +55,11 @@ class Invocation:
     rejected: bool = False              # shed at admission (backpressure)
     prewarmed: bool = False             # served by a control-plane-prewarmed
     #                                     instance (policy-attributable warmth)
+    # the input ``data_ref`` was read from the executing node/worker's own
+    # resident copy (a parent workflow step produced it there) instead of
+    # round-tripping the object store — stamped by the dispatch path,
+    # rides the cluster settle frames (data-locality placement, PR 10)
+    locality_hit: bool = False
 
     # --- at-least-once delivery (leases / retry) ---
     # completed-or-lost execution attempts so far (0 = first try); bumped
@@ -111,6 +116,7 @@ class Invocation:
         self.node = self.accelerator = None
         self.cold_start = False
         self.prewarmed = False
+        self.locality_hit = False
 
     def reset_for_retry(self) -> None:
         """Prepare a lost invocation for redelivery: wipe the dead

@@ -25,10 +25,21 @@ import math
 import statistics
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.accelerator import AcceleratorSpec
 from repro.core.events import Invocation
 from repro.core.quantiles import QuantileSketch
 
 RFAST_WINDOW_S = 10.0
+
+
+def acc_type_of(accelerator: Optional[str]) -> Optional[str]:
+    """Accelerator *type* out of an invocation's placement string — every
+    backend formats it ``<local id>(<type>)`` (e.g. ``n0/acc1(gpu-k600)``,
+    ``local/w0(host-jax)``, ``w2/pid814(host-jax)``); None when untyped."""
+    if not accelerator or not accelerator.endswith(")"):
+        return None
+    idx = accelerator.rfind("(")
+    return accelerator[idx + 1:-1] if idx >= 0 else None
 
 
 def escape_label_value(value: str) -> str:
@@ -119,6 +130,53 @@ class MetricsCollector:
         # span-duration summaries fed by the tracer (repro.obs):
         # (runtime_id, span name) -> [count, total seconds, max seconds]
         self._span_durations: Dict[Tuple[str, str], List[float]] = {}
+        # per-accelerator-type cost/energy accounting: the backend that
+        # owns the fleet registers each type's pricing (cost_per_hour +
+        # idle/active watts); record() folds every successful invocation's
+        # measured ELat into dollars and joules for its type
+        self._acc_pricing: Dict[str, AcceleratorSpec] = {}
+        self._acc_usage: Dict[str, Dict[str, float]] = {}
+        self.n_locality_hits = 0    # inputs read from a resident copy
+
+    # -- accelerator pricing (cost/energy model) ------------------------
+    def register_accelerator(self, spec: AcceleratorSpec) -> None:
+        """Declare one accelerator type's cost/energy model.  Types that
+        execute without registration still accumulate busy seconds and
+        invocation counts, priced at zero."""
+        self._acc_pricing[spec.type] = spec
+
+    def _fold_accelerator(self, inv: Invocation) -> None:
+        acc_type = acc_type_of(inv.accelerator)
+        if acc_type is None or inv.elat is None:
+            return
+        row = self._acc_usage.get(acc_type)
+        if row is None:
+            row = self._acc_usage[acc_type] = {
+                "n_invocations": 0.0, "busy_s": 0.0,
+                "cost_dollars": 0.0, "energy_joules": 0.0,
+                "locality_hits": 0.0}
+        busy = max(inv.elat, 0.0)
+        spec = self._acc_pricing.get(acc_type)
+        row["n_invocations"] += 1
+        row["busy_s"] += busy
+        if spec is not None:
+            row["cost_dollars"] += busy * spec.cost_per_hour / 3600.0
+            row["energy_joules"] += spec.active_watts * busy
+        if inv.locality_hit:
+            row["locality_hits"] += 1
+
+    def accelerator_usage(self) -> Dict[str, Dict[str, float]]:
+        """Per-accelerator-type invocation count, busy seconds, dollars
+        and joules (joules-per-invocation derive from measured ELat ×
+        the registered active watts)."""
+        return {t: dict(self._acc_usage[t])
+                for t in sorted(self._acc_usage)}
+
+    def total_cost_dollars(self) -> float:
+        return sum(r["cost_dollars"] for r in self._acc_usage.values())
+
+    def total_energy_joules(self) -> float:
+        return sum(r["energy_joules"] for r in self._acc_usage.values())
 
     def record(self, inv: Invocation) -> None:
         assert inv.check_monotone(), f"non-monotone timestamps: {inv}"
@@ -139,6 +197,10 @@ class MetricsCollector:
             trow["r_success"] += 1
         if inv.rejected:
             trow["rejected"] += 1
+        if inv.locality_hit:
+            self.n_locality_hits += 1
+        if inv.success:
+            self._fold_accelerator(inv)
         if inv.success and inv.r_end is not None:
             if self._success_ends and inv.r_end < self._success_ends[-1]:
                 self._ends_sorted = False
@@ -309,6 +371,9 @@ class MetricsCollector:
         }
         if self._span_durations:
             out["span_durations"] = self.span_durations()
+        if self._acc_usage:
+            out["accelerator_usage"] = self.accelerator_usage()
+            out["locality_hits"] = self.n_locality_hits
         return out
 
     def prometheus_text(self, prefix: str = "hardless") -> str:
@@ -355,6 +420,32 @@ class MetricsCollector:
                 lines.append(f'{prefix}_tenant_{k}'
                              f'{{tenant="{escape_label_value(tenant)}"}} '
                              f'{r[k]}')
+        if self._acc_usage:
+            usage = self.accelerator_usage()
+            for name, field, help_txt in (
+                    ("cost_dollars_total", "cost_dollars",
+                     "accelerator-seconds cost per accelerator type "
+                     "(measured ELat x registered cost_per_hour)"),
+                    ("energy_joules_total", "energy_joules",
+                     "active energy per accelerator type "
+                     "(measured ELat x registered active watts)"),
+                    ("acc_busy_seconds_total", "busy_s",
+                     "execution seconds per accelerator type"),
+                    ("acc_invocations_total", "n_invocations",
+                     "successful invocations per accelerator type")):
+                lines.append(f"# HELP {prefix}_{name} {help_txt}")
+                lines.append(f"# TYPE {prefix}_{name} counter")
+                for acc_type, row in usage.items():
+                    lines.append(
+                        f'{prefix}_{name}'
+                        f'{{accelerator="{escape_label_value(acc_type)}"}} '
+                        f'{row[field]}')
+            lines.append(f"# HELP {prefix}_locality_hits_total inputs "
+                         f"read from a node-resident copy (no store "
+                         f"round trip)")
+            lines.append(f"# TYPE {prefix}_locality_hits_total counter")
+            lines.append(f"{prefix}_locality_hits_total "
+                         f"{self.n_locality_hits}")
         if self._span_durations:
             for suffix, idx in (("count", 0), ("seconds_total", 1)):
                 lines.append(f"# HELP {prefix}_span_{suffix} trace-span "

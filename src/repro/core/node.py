@@ -46,6 +46,9 @@ class NodeManager:
         self.n_cold_starts = 0
         self.n_warm_starts = 0
         self.n_prewarms = 0
+        self.n_locality_hits = 0     # inputs read from this node's own
+        #                              resident copies (no store round trip)
+        self._wakeups: Set[float] = set()    # pending locality-defer wakes
         self.draining = False        # set by the autoscaler: finish current
         #                              work, take no new events
         self.dead = False            # fault injection: node crashed — its
@@ -82,6 +85,10 @@ class NodeManager:
             acc.warm.clear()
             acc.prewarmed.clear()
         self._real_handles.clear()
+        # local result copies die with the node: drop the residency hints
+        # so placement falls back to store round-trips (the blobs
+        # themselves were persisted to the store at completion)
+        self.store.drop_resident(self.name)
 
     def stall(self, duration_s: float) -> None:
         """Hang this node for ``duration_s``: it takes no new events and
@@ -98,15 +105,30 @@ class NodeManager:
         return self.clock.now() < self.stalled_until
 
     # ------------------------------------------------------------------
+    def schedule_wakeup(self, at: float) -> None:
+        """Re-arm ``try_start_work`` at ``at`` — the objective schedulers
+        call this when they defer a remote-resident event so its owner can
+        claim it; without the wake the defer window would strand the event
+        on an otherwise idle fleet.  Deduplicated per wake time."""
+        if at in self._wakeups:
+            return
+        self._wakeups.add(at)
+
+        def fire():
+            self._wakeups.discard(at)
+            self.try_start_work()
+        self.clock.call_at(at, fire)
+
     def try_start_work(self) -> None:
         """Pull work while capacity remains (paper Fig. 1 select loop)."""
         if self.draining or self.dead or self.stalled:
             return
         while True:
-            picked = self.scheduler.pick(self.queue, self, self.clock.now())
-            if picked is None:
+            decision = self.scheduler.pick(self.queue, self,
+                                           self.clock.now())
+            if decision is None:
                 return
-            inv, acc = picked
+            inv, acc = decision
             if self._expired(inv):
                 self._fail(inv, "timeout-in-queue")
                 continue
@@ -141,9 +163,21 @@ class NodeManager:
                                         pinned=self.pinned):
                 self._real_handles.pop(victim, None)
 
-        # stateless: fetch the data set before running (§IV-A)
-        fetch = (self.store.transfer_time(inv.data_ref)
-                 if inv.data_ref in self.store else self.store.rtt)
+        # stateless: fetch the data set before running (§IV-A) — unless
+        # this very node produced the input (a parent workflow step ran
+        # here), in which case it reads its own resident copy: no store
+        # probe, no transfer, and the round-trip counters stay flat
+        local = bool(inv.data_ref) and \
+            self.store.resident_on(inv.data_ref) == self.name and \
+            self.store.peek_size(inv.data_ref) is not None
+        inv.locality_hit = local
+        if local:
+            fetch = 0.0
+            self.n_locality_hits += 1
+            self.store.n_local_reads += 1
+        else:
+            fetch = (self.store.transfer_time(inv.data_ref)
+                     if inv.data_ref in self.store else self.store.rtt)
         inv.e_start = inv.n_start + cold_start + fetch
         if TRACER.enabled and inv.trace_id is not None and cold_start > 0.0:
             # stamped in virtual time at dispatch (the duration is not
@@ -163,8 +197,11 @@ class NodeManager:
         att = inv.attempt
         if rdef.fn is not None:
             # real execution: run now (simulation time advances by wall time)
-            data = unwrap_outcome(self.store.get(inv.data_ref)) \
-                if inv.data_ref in self.store else None
+            if local:
+                data = unwrap_outcome(self.store.peek(inv.data_ref))
+            else:
+                data = unwrap_outcome(self.store.get(inv.data_ref)) \
+                    if inv.data_ref in self.store else None
             if not warm and rdef.setup is not None and \
                     inv.runtime_key not in self._real_handles:
                 self._real_handles[inv.runtime_key] = rdef.setup()
@@ -223,6 +260,9 @@ class NodeManager:
         # land in the store; gateway futures poll this key) — a failure
         # keeps its partial result alongside the error
         self.store.persist_outcome(inv, result, err)
+        # the producing node keeps its result resident: a dependent
+        # workflow step placed here reads it locally (data locality)
+        self.store.note_resident(inv.result_ref, self.name)
         acc.mark_warm(inv.runtime_key, now, self.max_warm,
                       pinned=self.pinned)
         acc.total_busy_time += inv.e_end - (inv.e_start or now)

@@ -73,6 +73,12 @@ class ObjectStore:
         # the 1M-event scale path caps resident results; None = keep all
         self.outcome_max = outcome_max
         self._outcome_keys: Deque[str] = deque()
+        # data-locality residency hints: key -> node name that holds a
+        # local copy (the producing node keeps its own results resident).
+        # Read by the placement layer; a locality hit reads the local copy
+        # and never probes the store (n_contains/n_gets stay flat).
+        self._residency: Dict[str, str] = {}
+        self.n_local_reads = 0           # store round-trips locality avoided
 
     # -- data plane ----------------------------------------------------
     def put(self, obj: Any, key: Optional[str] = None) -> str:
@@ -203,6 +209,44 @@ class ObjectStore:
         if not is_outcome(rec):
             raise TypeError(f"{ref!r} does not hold an outcome envelope")
         return rec
+
+    # -- data-locality residency hints -----------------------------------
+    def note_resident(self, key: Optional[str], node: str) -> None:
+        """Record that ``node`` holds a local copy of ``key`` (the node
+        that produced a result keeps it resident until it dies)."""
+        if key:
+            self._residency[key] = node
+
+    def resident_on(self, key: Optional[str]) -> Optional[str]:
+        """Node holding a local copy of ``key`` (no counters — this is a
+        placement hint lookup, not a data-plane round trip)."""
+        if not key:
+            return None
+        return self._residency.get(key)
+
+    def drop_resident(self, node: str) -> int:
+        """Forget every residency hint pointing at ``node`` (node death /
+        drain) so placement falls back to store round-trips; returns the
+        number of hints dropped."""
+        dead = [k for k, n in self._residency.items() if n == node]
+        for k in dead:
+            del self._residency[k]
+        return len(dead)
+
+    def peek(self, key: str) -> Any:
+        """Read a blob *without* bumping the round-trip counters — the
+        locality fast path: the caller already holds a resident copy, so
+        this models a node-local read, not a storage-network fetch."""
+        blob = self._blobs[key]
+        if key in self._raw:
+            return blob
+        return pickle.loads(blob)
+
+    def peek_size(self, key: str) -> Optional[int]:
+        """Blob size without counters (scheduler fetch-time estimates);
+        None when the key is absent."""
+        blob = self._blobs.get(key)
+        return None if blob is None else len(blob)
 
     # -- latency model ---------------------------------------------------
     def transfer_time(self, key: str) -> float:

@@ -134,6 +134,13 @@ class Backend:
         """Submitted-but-unsettled event count (0 when fully drained)."""
         raise NotImplementedError
 
+    def backlog_by_type(self) -> Dict[str, Dict[str, int]]:
+        """Per-accelerator-type pressure: ``type -> {queued, busy, free,
+        warm}`` (the operator's heterogeneity view).  ``{}`` when the
+        backend has no typed view; the aggregate :meth:`backlog` remains
+        the authoritative event count."""
+        return {}
+
     def wait_any(self, invs: Sequence[Invocation],
                  timeout_s: float = 600.0) -> bool:
         """Block until at least one of ``invs`` settles (r_end set).
@@ -174,24 +181,32 @@ class SimBackend(Backend):
         self.cluster.submit(inv, gate=gate)
 
     def capacity_hooks(self, spec: Optional[AcceleratorSpec] = None,
+                       specs: Optional[Sequence[AcceleratorSpec]] = None,
                        node_prefix: str = "cp",
-                       provision_delay_s: float = 45.0
+                       provision_delay_s: float = 45.0,
+                       objective: str = "latency"
                        ) -> "SimCapacityHooks":
         """Control-plane surface over this cluster.  ``spec`` is the node
         template scale-out provisions (default: the first accelerator spec
-        already in the cluster); built once and cached."""
+        already in the cluster); pass ``specs`` (several templates) for a
+        heterogeneous fleet whose scale-out picks the type ``objective``
+        favours — cheapest $/slot (``cost``), lowest watts (``energy``) or
+        fastest profile (``latency``).  Built once and cached."""
         if self._hooks is None:
-            if spec is None:
-                for node in self.cluster.nodes:
-                    if node.accelerators:
-                        spec = node.accelerators[0].spec
-                        break
-            if spec is None:
-                raise ValueError("empty cluster: pass spec= for the node "
-                                 "template capacity_hooks should provision")
+            if specs is None:
+                if spec is None:
+                    for node in self.cluster.nodes:
+                        if node.accelerators:
+                            spec = node.accelerators[0].spec
+                            break
+                if spec is None:
+                    raise ValueError(
+                        "empty cluster: pass spec= for the node "
+                        "template capacity_hooks should provision")
+                specs = [spec]
             self._hooks = SimCapacityHooks(
-                self, spec, node_prefix=node_prefix,
-                provision_delay_s=provision_delay_s)
+                self, list(specs), node_prefix=node_prefix,
+                provision_delay_s=provision_delay_s, objective=objective)
         return self._hooks
 
     def drain(self, extra_time_s: float = 600.0) -> None:
@@ -205,6 +220,10 @@ class SimBackend(Backend):
     def backlog(self) -> int:
         """Submitted events whose completion has not been recorded yet."""
         return self._n_submitted - self.metrics.n_recorded
+
+    def backlog_by_type(self) -> Dict[str, Dict[str, int]]:
+        """Per-accelerator-type queue/slot/warm pressure on the cluster."""
+        return self.cluster.backlog_by_type()
 
     def wait(self, inv: Invocation, timeout_s: float = 600.0) -> bool:
         """Advance the virtual clock until ``inv`` settles (per-event wait
@@ -232,16 +251,65 @@ class SimCapacityHooks(CapacityHooks):
     whole nodes (driven through the same :class:`~repro.core.autoscaler.
     NodeFleet` actuator the legacy queue-pressure autoscaler uses), warm
     instances live on accelerators, prewarm is the node manager's
-    off-critical-path instance install."""
+    off-critical-path instance install.
 
-    def __init__(self, backend: SimBackend, spec: AcceleratorSpec,
-                 node_prefix: str = "cp", provision_delay_s: float = 45.0):
+    With several node templates (``specs``) the hooks keep one fleet per
+    accelerator type and route scale-out to the type the ``objective``
+    favours — but only while the SLO holds (:meth:`note_slo`): a violated
+    SLO always buys the fastest type, so cost/energy never trade away
+    attainment."""
+
+    def __init__(self, backend: SimBackend, spec, node_prefix: str = "cp",
+                 provision_delay_s: float = 45.0,
+                 objective: str = "latency"):
         from repro.core.autoscaler import NodeFleet
         self.backend = backend
         self.cluster = backend.cluster
-        self.fleet = NodeFleet(self.cluster, spec, node_prefix=node_prefix,
-                               provision_delay_s=provision_delay_s)
+        self.objective = objective
+        self._slo_ok = True
+        specs = list(spec) if isinstance(spec, (list, tuple)) else [spec]
+        self.fleets: List[Any] = []
+        for s in specs:
+            prefix = node_prefix if len(specs) == 1 \
+                else f"{node_prefix}-{s.type}"
+            self.fleets.append(NodeFleet(
+                self.cluster, s, node_prefix=prefix,
+                provision_delay_s=provision_delay_s))
+        self.fleet = self.fleets[0]     # legacy single-template view
         self._prewarming: Set[tuple] = set()    # (acc local_id, runtime_key)
+
+    # -- objective-aware template choice ---------------------------------
+    def note_slo(self, ok: bool) -> None:
+        """SLO health signal from the scaler's tick: while the SLO is
+        violated, cost/energy objectives fall back to latency-first
+        provisioning (spend whatever it takes to restore attainment)."""
+        self._slo_ok = bool(ok)
+
+    def _mean_elat(self, spec: AcceleratorSpec) -> float:
+        """Mean profile ELat of registered runtimes on ``spec``'s type
+        (inf when nothing registered runs there — never provision it)."""
+        reg = self.cluster.registry
+        elats = [reg.get(rid).profiles[spec.type].elat_median_s
+                 for rid in reg.ids() if reg.get(rid).supports(spec.type)]
+        return sum(elats) / len(elats) if elats else float("inf")
+
+    def _template_rank(self, spec: AcceleratorSpec) -> tuple:
+        """Sort key: lower = more preferred for scale-out/prewarm."""
+        if self.objective == "cost" and self._slo_ok:
+            return (spec.cost_per_hour / max(spec.slots, 1),
+                    self._mean_elat(spec))
+        if self.objective == "energy" and self._slo_ok:
+            return (spec.active_watts / max(spec.slots, 1),
+                    self._mean_elat(spec))
+        return (self._mean_elat(spec), spec.cost_per_hour)
+
+    def _fleets_ranked(self) -> List[Any]:
+        """Fleets most-preferred first (provision order); usable types
+        (some registered runtime runs there) always rank ahead."""
+        return sorted(
+            self.fleets,
+            key=lambda f: (self._mean_elat(f.spec) == float("inf"),
+                           self._template_rank(f.spec)))
 
     # -- observation -----------------------------------------------------
     def capacity(self) -> int:
@@ -249,8 +317,8 @@ class SimCapacityHooks(CapacityHooks):
         return len(self.fleet.active_nodes)
 
     def pending(self) -> int:
-        """Nodes mid-provision (bring-up delay)."""
-        return self.fleet.pending
+        """Nodes mid-provision (bring-up delay) across every fleet."""
+        return sum(f.pending for f in self.fleets)
 
     def queue_depth(self) -> int:
         """Published events not yet taken by a node."""
@@ -286,38 +354,46 @@ class SimCapacityHooks(CapacityHooks):
 
     # -- actuation -------------------------------------------------------
     def set_target(self, n: int) -> None:
-        """Provision/drain whole nodes toward ``n`` active units."""
-        self.fleet.account()
-        current = len(self.fleet.active_nodes) + self.fleet.pending
+        """Provision/drain whole nodes toward ``n`` active units.  With
+        several templates, scale-out buys the objective's preferred type
+        and scale-in retires the least preferred managed nodes first."""
+        for f in self.fleets:
+            f.account()
+        ranked = self._fleets_ranked()
+        current = len(self.fleet.active_nodes) + self.pending()
         if n > current:
-            self.fleet.provision(n - current)
+            ranked[0].provision(n - current)
         else:
             for _ in range(len(self.fleet.active_nodes) - n):
-                if self.fleet.drain_one() is None:
+                if not any(f.drain_one() is not None
+                           for f in reversed(ranked)):
                     break       # only managed nodes are drainable
 
     def prewarm(self, runtime_id: str,
                 config: Optional[Dict[str, Any]] = None) -> bool:
         """Install one warm instance on a supporting accelerator, off the
-        critical path (resident after the profile's cold-start delay)."""
+        critical path (resident after the profile's cold-start delay).
+        Candidate accelerators are ranked by the objective — warm capacity
+        lands on the cheapest/most-frugal type that still holds the SLO
+        (stable sort: a homogeneous fleet keeps its insertion order)."""
         rdef = self.cluster.registry.get(runtime_id)
         key = runtime_key_for(runtime_id, config)
-        for node in self.cluster.nodes:
-            if node.draining:
+        cands = [(node, acc) for node in self.cluster.nodes
+                 if not node.draining for acc in node.accelerators
+                 if rdef.supports(acc.spec.type)]
+        cands.sort(key=lambda na: self._template_rank(na[1].spec))
+        for node, acc in cands:
+            tag = (acc.local_id, key)
+            if acc.has_warm(key) or tag in self._prewarming:
                 continue
-            for acc in node.accelerators:
-                tag = (acc.local_id, key)
-                if not rdef.supports(acc.spec.type) or \
-                        acc.has_warm(key) or tag in self._prewarming:
-                    continue
-                self._prewarming.add(tag)
-                prof = rdef.profiles[acc.spec.type]
-                node.prewarm(key, acc, prof.cold_start_s, setup=rdef.setup)
-                # the in-flight marker clears when the instance lands
-                self.cluster.clock.call_in(
-                    prof.cold_start_s,
-                    lambda tag=tag: self._prewarming.discard(tag))
-                return True
+            self._prewarming.add(tag)
+            prof = rdef.profiles[acc.spec.type]
+            node.prewarm(key, acc, prof.cold_start_s, setup=rdef.setup)
+            # the in-flight marker clears when the instance lands
+            self.cluster.clock.call_in(
+                prof.cold_start_s,
+                lambda tag=tag: self._prewarming.discard(tag))
+            return True
         return False
 
     def evict(self, runtime_key: str) -> bool:
@@ -373,6 +449,7 @@ class EngineBackend(Backend):
     autonomous = True       # worker threads progress without client driving
 
     def __init__(self, *, max_warm: int = 4, accelerator: str = HOST_ACC,
+                 accelerator_spec: Optional[AcceleratorSpec] = None,
                  n_workers: Optional[int] = None, max_batch: int = 8,
                  batch_wait_s: float = 0.002, max_queue: int = 256,
                  monitor_interval_s: float = 0.05):
@@ -381,6 +458,11 @@ class EngineBackend(Backend):
         self.metrics = MetricsCollector()
         self.max_warm = max_warm
         self.accelerator = accelerator
+        if accelerator_spec is not None:
+            # price this host's invocations (cost/energy counters) from
+            # the spec's model; the spec's type becomes the reported type
+            self.accelerator = accelerator_spec.type
+            self.metrics.register_accelerator(accelerator_spec)
         self.max_batch = max(int(max_batch), 1)
         self.batch_wait_s = max(float(batch_wait_s), 0.0)
         self.max_queue = max(int(max_queue), 1)
@@ -574,6 +656,16 @@ class EngineBackend(Backend):
         """Pending + in-flight event count (the backpressure signal)."""
         with self._lock:
             return self._n_pending + self._n_inflight
+
+    def backlog_by_type(self) -> Dict[str, Dict[str, int]]:
+        """Single-type view: everything on this host's accelerator."""
+        with self._lock:
+            workers = self._target_workers or self._n_workers_req or 1
+            return {self.accelerator: {
+                "queued": self._n_pending,
+                "busy": self._n_inflight,
+                "free": max(workers - len(self._busy_keys), 0),
+                "warm": len(self._handles)}}
 
     def drain(self, extra_time_s: float = 600.0) -> None:
         """Block until the dispatcher is idle (or ``extra_time_s`` elapses).
@@ -972,8 +1064,11 @@ class EngineBackend(Backend):
             return {k: now - self._handle_idle_since.get(k, now)
                     for k in self._handles}
 
-    def capacity_hooks(self) -> "EngineCapacityHooks":
-        """Control-plane surface over this dispatcher (cached)."""
+    def capacity_hooks(self, objective: str = "latency"
+                       ) -> "EngineCapacityHooks":
+        """Control-plane surface over this dispatcher (cached).
+        ``objective`` is accepted for parity with the sim hooks — a
+        single-host, single-type dispatcher has no placement choice."""
         if self._hooks is None:
             self._hooks = EngineCapacityHooks(self)
         return self._hooks

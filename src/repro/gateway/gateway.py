@@ -165,6 +165,12 @@ class Gateway:
         in-flight) — the client-visible backpressure signal."""
         return self.backend.backlog()
 
+    def backlog_by_type(self) -> Dict[str, Dict[str, int]]:
+        """Per-accelerator-type pressure: ``type -> {queued, busy, free,
+        warm}`` — which hardware the backlog is waiting on (``{}`` on a
+        backend without a typed view)."""
+        return self.backend.backlog_by_type()
+
     def summary(self) -> Dict[str, float]:
         """The backend's aggregate metric summary (§V-A derived numbers)."""
         return self.backend.metrics.summary()

@@ -21,6 +21,15 @@ node through the **object store** (a chained step's ``data_ref`` *is* its
 parent's ``result_ref``; a fan-in step reads one combined list staged by
 :meth:`ObjectStore.gather`), never through the client.
 
+Because a chained step's ``data_ref`` is its parent's ``result_ref``, the
+placement layer's data-locality scoring (``docs/scheduling.md``) can route
+the child to the node that produced the parent's result and read the copy
+still resident there — zero store round-trips along a chain.  Fan-in
+steps are *not* locality-eligible: the gather barrier stages a fresh
+combined object that is resident nowhere.  :meth:`WorkflowFuture.
+locality_hits` / :meth:`WorkflowFuture.locality_rate` report how often
+placement achieved this.
+
 Two drive modes, decided by ``Backend.autonomous``:
 
 * engine backend — a daemon driver thread per workflow reacts to
@@ -257,6 +266,26 @@ class WorkflowFuture:
         """The last invocation future of step ``name`` (None while pending
         or when the step was cancelled before submission)."""
         return self._state.steps[name].future
+
+    def locality_hits(self) -> int:
+        """Steps whose invocation read its input from a node-local copy
+        (placement co-located the child with the node holding its
+        parent's result — no store round-trip).  Final after ``done()``."""
+        return sum(1 for ss in self._state.steps.values()
+                   if ss.future is not None
+                   and ss.future.invocation.locality_hit)
+
+    def locality_rate(self) -> float:
+        """Locality hits over locality-*eligible* steps — single-parent
+        chain steps (fan-in gathers stage a fresh combined object that is
+        resident nowhere).  1.0 when no step is eligible."""
+        eligible = [ss for ss in self._state.steps.values()
+                    if len(ss.step.deps) == 1]
+        if not eligible:
+            return 1.0
+        hits = sum(1 for ss in eligible if ss.future is not None
+                   and ss.future.invocation.locality_hit)
+        return hits / len(eligible)
 
     def result(self, *, extra_time_s: float = 600.0) -> Any:
         """Block until the workflow settles; return the sink output(s).

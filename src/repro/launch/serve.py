@@ -62,8 +62,19 @@ def main(argv=None):
     ap.add_argument("--events", type=int, default=6)
     ap.add_argument("--max-new-tokens", type=int, default=6)
     ap.add_argument("--scheduler", default=None,
-                    choices=["warm", "fifo", "cost"],
-                    help="sim backend only (default warm)")
+                    choices=["warm", "fifo", "cost", "hetero-latency",
+                             "hetero-cost", "hetero-energy"],
+                    help="sim backend only (default warm; the hetero-* "
+                         "family scores placements by objective — "
+                         "docs/scheduling.md)")
+    ap.add_argument("--objective", default=None,
+                    choices=["latency", "cost", "energy"],
+                    help="placement objective (default latency): picks the "
+                         "matching hetero-* scheduler on the sim backend "
+                         "and steers control-plane scale-out/prewarm "
+                         "toward the cheapest / most energy-frugal "
+                         "accelerator type that still holds the SLO "
+                         "(docs/scheduling.md)")
     ap.add_argument("--backend", default="sim", choices=["sim", "engine"],
                     help="sim = pod cluster on the event clock; "
                          "engine = direct execution on this host")
@@ -159,8 +170,14 @@ def main(argv=None):
         ap.error("--max-batch/--batch-wait-ms only apply to "
                  "--backend engine (the sim models batching in its "
                  "service-time profiles)")
+    if args.objective is not None and args.scheduler is not None:
+        ap.error("--objective and --scheduler both pick the sim placement "
+                 "policy; pass one (--objective X equals --scheduler "
+                 "hetero-X plus the control-plane spend steer)")
+    objective = args.objective if args.objective is not None else "latency"
     pods = args.pods if args.pods is not None else 2
-    scheduler = args.scheduler if args.scheduler is not None else "warm"
+    scheduler = args.scheduler if args.scheduler is not None else (
+        f"hetero-{args.objective}" if args.objective is not None else "warm")
     max_batch = args.max_batch if args.max_batch is not None else 8
 
     acc_type = "v5e-4x4" if mode == "sim" else "host-jax"
@@ -275,6 +292,7 @@ def main(argv=None):
                 quotas[name] = (rate, burst)
             plane = ControlPlane(ControlPlaneConfig(
                 tick_interval_s=5.0 if mode == "sim" else 0.5,
+                objective=objective,
                 # the sim's pre-provisioned pods are the capacity floor
                 # (they are not drainable); engine/cluster floor at one
                 slo=(SLOPolicy(slo_rlat_p99_s=args.slo_ms / 1e3,

@@ -311,6 +311,38 @@ def test_indexed_scheduler_identical_with_admission_sheds(policy):
     assert any(v[11] for v in indexed.values())     # some sheds occurred
 
 
+# The objective family (PR 10) runs the same differential on the same
+# mixed-cost fleet (GPU_K600 $0.50/hr/41W vs VPU_NCS $0.10/hr/2W): every
+# indexed hetero-* pick — including the data-locality defer window —
+# must equal its preserved Scan* reference.
+HETERO_POLICIES = ("hetero-latency", "hetero-cost", "hetero-energy")
+
+
+@pytest.mark.parametrize("policy", HETERO_POLICIES)
+def test_indexed_hetero_scheduler_identical_schedule(policy):
+    indexed, reference = _run_pair(policy, seed=7)
+    assert indexed == reference
+    assert len(indexed) == 120      # every event settled
+
+
+@pytest.mark.parametrize("policy", HETERO_POLICIES)
+def test_indexed_hetero_identical_with_sheds_and_faults(policy):
+    spec = [{"at": 6.0, "op": "kill-node", "node": "n1"}]
+    indexed, reference = _run_pair(policy, seed=11, gate=True,
+                                   fault_spec=spec)
+    assert indexed == reference
+    assert any(v[11] for v in indexed.values())     # some sheds occurred
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", HETERO_POLICIES)
+@pytest.mark.parametrize("seed", range(30, 36))
+def test_indexed_hetero_scheduler_identical_schedule_deep(policy, seed):
+    indexed, reference = _run_pair(policy, seed=seed, gate=(seed % 2 == 0),
+                                   n=400)
+    assert indexed == reference
+
+
 @pytest.mark.parametrize("policy", ("fifo", "warm"))
 def test_indexed_scheduler_identical_under_faults(policy):
     spec = [{"at": 6.0, "op": "kill-node", "node": "n1"},
